@@ -1,0 +1,44 @@
+"""Batched device search vs per-query host search (this framework's
+TPU-serving contribution): throughput of the jitted lockstep beam search."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, get_method, queries
+from repro.core import EntryTable
+from repro.search import batched_udg_search, export_device_graph
+
+
+def main() -> None:
+    vecs, s, t = dataset()
+    m = get_method("udg", "containment", M=16, Z=64, K_p=8)
+    dg = export_device_graph(m.g, EntryTable(m.g))
+    for sigma in (0.01, 0.1):
+        qs = queries(vecs, s, t, "containment", sigma)
+        # warm up (compile)
+        batched_udg_search(dg, qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
+                           use_ref=True)
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            ids, _ = batched_udg_search(dg, qs.vectors, qs.s_q, qs.t_q,
+                                        k=10, beam=64, use_ref=True)
+        us = (time.perf_counter() - t0) / (iters * qs.nq) * 1e6
+        from repro.data import recall_at_k
+        rec = recall_at_k(ids, qs)
+        # host reference path
+        t0 = time.perf_counter()
+        for i in range(qs.nq):
+            m.search(qs.vectors[i], qs.s_q[i], qs.t_q[i], 10, 64)
+        host_us = (time.perf_counter() - t0) / qs.nq * 1e6
+        emit(
+            f"batched.containment.sel{sigma}", us,
+            recall=round(rec, 4), host_us=round(host_us, 1),
+            batch=qs.nq, beam=64,
+        )
+
+
+if __name__ == "__main__":
+    main()

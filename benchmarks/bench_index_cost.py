@@ -1,0 +1,27 @@
+"""Paper Table IV: index construction time and size (containment, since
+Hi-PNG is containment-specific). Sizes exclude raw vector storage, matching
+the paper's convention."""
+from __future__ import annotations
+
+from benchmarks.common import emit, get_method
+
+
+def main() -> None:
+    for kind, kw in [
+        ("postfilter", dict(M=16, ef_construction=64)),
+        ("acorn", dict(M=16, gamma=6, ef_construction=64)),
+        ("hipng", dict(M=12, ef_construction=48, leaf_size=256,
+                       min_graph_size=128)),
+        ("udg", dict(M=16, Z=64, K_p=8)),
+    ]:
+        m = get_method(kind, "containment", **kw)
+        emit(
+            f"table4.{kind}",
+            m.build_seconds * 1e6,
+            build_s=round(m.build_seconds, 2),
+            size_mb=round(m.index_bytes / 1e6, 2),
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Kernel-level microbenchmarks + TPU roofline projections.
+
+On this CPU container the Pallas kernels run under interpret=True (Python
+per-block — correctness only), so the timed path is the jnp oracle (what
+XLA:CPU fuses), and the ``derived`` column carries the *structural* terms
+that transfer to TPU: bytes moved, FLOPs, arithmetic intensity, and the
+projected v5e time at the memory/compute roofline."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+SHAPES = [
+    # (Bq, Bc, D)   typical beam expansion / shard-scan shapes
+    (64, 512, 128),
+    (256, 4096, 128),
+    (64, 512, 768),
+]
+
+
+def _time(fn, *args, iters=20):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for bq, bc, d in SHAPES:
+        q = jnp.asarray(rng.normal(size=(bq, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(bc, d)).astype(np.float32))
+        f32 = jax.jit(lambda a, b: ref.l2dist_ref(a, b))
+        us = _time(f32, q, c)
+        flops = 2.0 * bq * bc * d
+        bytes_moved = 4.0 * (bq * d + bc * d + bq * bc)
+        v5e_us = max(flops / PEAK_FLOPS, bytes_moved / HBM_BW) * 1e6
+        emit(
+            f"kernel.l2dist.{bq}x{bc}x{d}", us,
+            flops=f"{flops:.2e}", bytes=f"{bytes_moved:.2e}",
+            intensity=round(flops / bytes_moved, 2),
+            v5e_roofline_us=round(v5e_us, 2),
+        )
+        cq, cs = ops.quantize_int8(c)
+        int8 = jax.jit(lambda a, b, s: ref.int8_l2dist_ref(a, b, s))
+        us8 = _time(int8, q, cq, cs)
+        bytes8 = 4.0 * bq * d + 1.0 * bc * d + 4.0 * bc + 4.0 * bq * bc
+        emit(
+            f"kernel.int8dist.{bq}x{bc}x{d}", us8,
+            bytes=f"{bytes8:.2e}",
+            hbm_saving=round(bytes_moved / bytes8, 2),
+            v5e_roofline_us=round(
+                max(flops / PEAK_FLOPS, bytes8 / HBM_BW) * 1e6, 2),
+        )
+    # fused filter+distance at beam-expansion shape
+    B, E, D = 64, 128, 128
+    qv = jnp.asarray(rng.normal(size=(B, D)).astype(np.float32))
+    cand = jnp.asarray(rng.normal(size=(B, E, D)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 100, size=(B, E, 4)).astype(np.int32))
+    state = jnp.asarray(rng.integers(0, 100, size=(B, 2)).astype(np.int32))
+    ids = jnp.asarray(rng.integers(-1, 1000, size=(B, E)).astype(np.int32))
+    fused = jax.jit(lambda *a: ref.filter_dist_ref(*a))
+    us = _time(fused, qv, cand, labels, state, ids)
+    flops = 2.0 * B * E * D
+    bytes_moved = 4.0 * (B * D + B * E * D + B * E * 4 + B * E)
+    emit(
+        f"kernel.filter_dist.{B}x{E}x{D}", us,
+        flops=f"{flops:.2e}", bytes=f"{bytes_moved:.2e}",
+        v5e_roofline_us=round(
+            max(flops / PEAK_FLOPS, bytes_moved / HBM_BW) * 1e6, 2),
+    )
+
+
+if __name__ == "__main__":
+    main()

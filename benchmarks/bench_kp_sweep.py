@@ -1,0 +1,29 @@
+"""Paper Figure 8: patch pool factor K_p — best QPS at recall@10 >= 0.99
+(0.1% selectivity) together with the index time."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, measure, queries, UDGMethod
+
+
+def main() -> None:
+    vecs, s, t = dataset()
+    qs = queries(vecs, s, t, "containment", 0.001)
+    for kp in (1, 2, 4, 8, 16):
+        m = UDGMethod(M=16, Z=64, K_p=kp)
+        m.build(vecs, s, t, "containment")
+        best = None
+        for ef in (16, 32, 64, 128, 256):
+            rec, us = measure(m, qs, ef)
+            if rec >= 0.99 and (best is None or us < best[1]):
+                best = (rec, us)
+        if best is None:
+            best = measure(m, qs, 256)
+        emit(
+            f"fig8.kp{kp}", best[1],
+            recall=round(best[0], 4), qps=round(1e6 / best[1]),
+            index_s=round(m.build_seconds, 2),
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Figures 2 + 3: containment and overlap recall-QPS frontiers across
+five selectivities, UDG vs PostFilter-HNSW / PreFilter / ACORN / Hi-PNG
+(Hi-PNG containment-only, as in the paper)."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    dataset, emit, get_method, pareto_sweep, queries,
+)
+
+SELECTIVITIES = (0.001, 0.01, 0.05, 0.1, 0.5)
+
+
+def run(relation: str = "containment") -> None:
+    vecs, s, t = dataset()
+    methods = ["udg", "postfilter", "acorn", "prefilter"]
+    if relation == "containment":
+        methods.append("hipng")
+    built = {}
+    for kind in methods:
+        kw = {}
+        if kind == "udg":
+            kw = dict(M=16, Z=64, K_p=8)
+        elif kind == "postfilter":
+            kw = dict(M=16, ef_construction=64)
+        elif kind == "acorn":
+            kw = dict(M=16, gamma=6, ef_construction=64)
+        elif kind == "hipng":
+            kw = dict(M=12, ef_construction=48, leaf_size=256, min_graph_size=128)
+        built[kind] = get_method(kind, relation, **kw)
+    for sigma in SELECTIVITIES:
+        qs = queries(vecs, s, t, relation, sigma)
+        for kind, m in built.items():
+            _, (rec_f, us_f), (rec_m, us_m) = pareto_sweep(m, qs)
+            emit(
+                f"fig{'2' if relation == 'containment' else '3'}."
+                f"{relation}.{kind}.sel{sigma}",
+                us_f,
+                recall=round(rec_f, 4),
+                qps=round(1e6 / us_f),
+                max_recall=round(rec_m, 4),
+                qps_at_max=round(1e6 / us_m),
+                sel=sigma,
+            )
+
+
+def main() -> None:
+    run("containment")
+    run("overlap")
+
+
+if __name__ == "__main__":
+    main()

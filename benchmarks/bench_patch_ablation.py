@@ -1,0 +1,36 @@
+"""Paper Figure 7: patch-edge ablation under restrictive filters —
+NoPatch / PreviousPatch / LifetimePatch / UDG-Patch (full)."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, pareto_sweep, queries, UDGMethod
+
+VARIANTS = [
+    ("nopatch", "none"),
+    ("previous", "previous"),
+    ("lifetime", "lifetime"),
+    ("udgpatch", "full"),
+]
+
+
+def main() -> None:
+    vecs, s, t = dataset()
+    built = {}
+    for label, variant in VARIANTS:  # build each variant once
+        m = UDGMethod(M=16, Z=64, K_p=8, patch=variant)
+        m.build(vecs, s, t, "containment")
+        built[label] = m
+    for sigma in (0.001, 0.01):
+        qs = queries(vecs, s, t, "containment", sigma)
+        for label, variant in VARIANTS:
+            m = built[label]
+            _, (rec, us), (rec_m, _) = pareto_sweep(m, qs)
+            emit(
+                f"fig7.{label}.sel{sigma}", us,
+                recall=round(rec, 4), qps=round(1e6 / us),
+                max_recall=round(rec_m, 4),
+                patch_tuples=m.g.num_patch_tuples,
+            )
+
+
+if __name__ == "__main__":
+    main()

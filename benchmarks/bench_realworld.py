@@ -1,0 +1,34 @@
+"""Paper Figure 4a: real-world (uncapped-length) interval workloads.
+
+The S&P 500 / Nasdaq datasets are not downloadable offline; the workload's
+defining property — uncapped, heavy-tailed interval lengths with
+selectivity-bucketed query intervals — is reproduced by the ``uncapped``
+metadata distribution (DESIGN.md §8.3)."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, get_method, pareto_sweep, queries
+
+
+def main() -> None:
+    dist = "uncapped"
+    vecs, s, t = dataset(dist)
+    for relation in ("containment", "overlap"):
+        for sigma in (0.01, 0.1):
+            qs = queries(vecs, s, t, relation, sigma)
+            for kind, kw in [
+                ("udg", dict(M=16, Z=64, K_p=8)),
+                ("postfilter", dict(M=16, ef_construction=64)),
+                ("prefilter", {}),
+            ]:
+                m = get_method(kind, relation,
+                               data_key=(dist, len(s), vecs.shape[1], 0), **kw)
+                _, (rec, us), (rec_m, _) = pareto_sweep(m, qs)
+                emit(
+                    f"fig4a.{relation}.{kind}.sel{sigma}", us,
+                    recall=round(rec, 4), qps=round(1e6 / us),
+                    max_recall=round(rec_m, 4),
+                )
+
+
+if __name__ == "__main__":
+    main()

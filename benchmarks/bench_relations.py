@@ -1,0 +1,35 @@
+"""Paper Figure 4b: three additional closed two-bound relations served by
+the same dominance-search operator after re-mapping (generality check)."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, get_method, pareto_sweep, queries
+
+CASES = [
+    # (relation, distribution, selectivity)
+    ("query_within_data", "uncapped", 0.01),
+    ("both_after", "uniform", 0.1),
+    ("both_before", "uniform", 0.1),
+]
+
+
+def main() -> None:
+    for relation, dist, sigma in CASES:
+        vecs, s, t = dataset(dist)
+        qs = queries(vecs, s, t, relation, sigma)
+        for kind, kw in [
+            ("udg", dict(M=16, Z=64, K_p=8)),
+            ("postfilter", dict(M=16, ef_construction=64)),
+            ("acorn", dict(M=16, gamma=6, ef_construction=64)),
+            ("prefilter", {}),
+        ]:
+            m = get_method(kind, relation, data_key=(dist, len(s), vecs.shape[1], 0), **kw)
+            _, (rec, us), (rec_m, _) = pareto_sweep(m, qs)
+            emit(
+                f"fig4b.{relation}.{kind}", us,
+                recall=round(rec, 4), qps=round(1e6 / us),
+                max_recall=round(rec_m, 4), sel=sigma, dist=dist,
+            )
+
+
+if __name__ == "__main__":
+    main()

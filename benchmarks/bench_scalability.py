@@ -1,0 +1,46 @@
+"""Paper Figure 6: scalability over dataset-size prefixes with fixed
+parameters (build time, index size, QPS, recall for both predicates)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BIG, emit, measure, queries
+from repro.core import EntryTable, build_udg, search_query
+from repro.data import make_dataset
+
+SIZES = (2000, 8000, 24000) if BIG else (1000, 3000, 9000)
+
+
+class _Wrap:
+    def __init__(self, g, et):
+        self.g, self.et = g, et
+
+    def search(self, q, s_q, t_q, k, ef):
+        return search_query(self.g, q, s_q, t_q, k, ef, self.et)
+
+
+def main() -> None:
+    for n in SIZES:
+        vecs, s, t = make_dataset(n, 32, seed=0)
+        t0 = time.perf_counter()
+        g, rep = build_udg(vecs, s, t, "containment", M=16, Z=64, K_p=8)
+        build_s = time.perf_counter() - t0
+        m = _Wrap(g, EntryTable(g))
+        for relation in ("containment", "overlap"):
+            if relation == "overlap":
+                g2, _ = build_udg(vecs, s, t, relation, M=16, Z=64, K_p=8)
+                mm = _Wrap(g2, EntryTable(g2))
+            else:
+                mm = m
+            qs = queries(vecs, s, t, relation, 0.01, nq=24)
+            rec, us = measure(mm, qs, 128)
+            emit(
+                f"fig6.{relation}.n{n}", us,
+                recall=round(rec, 4), qps=round(1e6 / us),
+                build_s=round(build_s, 2),
+                size_mb=round(rep.index_bytes / 1e6, 2),
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Distributed serving scaling: recall + throughput of the shard_map
+serving step as database sharding widens (runs in a subprocess with 8
+host-platform devices so the main process keeps its 1-device view)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = """
+import time
+import numpy as np
+from repro.data import (make_dataset, make_queries_vectors, generate_queries,
+                        ground_truth, recall_at_k)
+from repro.launch.mesh import make_host_mesh
+from repro.serve import build_sharded_index, serve_batch
+
+vecs, s, t = make_dataset(2048, 24, seed=0)
+qv = make_queries_vectors(32, 24, seed=1)
+qs = ground_truth(generate_queries(qv, s, t, "containment", 0.02, k=10, seed=2),
+                  vecs, s, t)
+for shards in (2, 4, 8):
+    idx = build_sharded_index(vecs, s, t, "containment", shards, M=10, Z=48)
+    mesh = make_host_mesh(model_parallel=shards)
+    # warm-up compile
+    serve_batch(idx, mesh, qs.vectors, qs.s_q, qs.t_q, k=10, beam=48,
+                merge="tournament")
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        ids, _ = serve_batch(idx, mesh, qs.vectors, qs.s_q, qs.t_q, k=10,
+                             beam=48, merge="tournament")
+    us = (time.perf_counter() - t0) / (iters * qs.nq) * 1e6
+    rec = recall_at_k(ids, qs)
+    print(f"serving.shards{shards},{us:.1f},recall={rec:.4f}|"
+          f"qps={1e6/us:.0f}|n=2048|merge=tournament", flush=True)
+"""
+
+
+def main() -> None:
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        PYTHONPATH=os.path.join(REPO, "src"),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _CODE], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-1500:])
+    print(out.stdout, end="")
+
+
+if __name__ == "__main__":
+    main()

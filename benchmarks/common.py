@@ -1,0 +1,118 @@
+"""Shared benchmark infrastructure.
+
+Scale: this container is a single CPU core (the paper used 64 Xeon cores),
+so defaults are n=6000, d=32 — every algorithmic regime of the paper's
+evaluation is preserved (see DESIGN.md §6). Set REPRO_BENCH_SCALE=big for
+n=24000 on larger hosts.
+
+Output contract (benchmarks/run.py): one CSV line per measured case —
+``name,us_per_call,derived`` where ``us_per_call`` is the mean per-query
+latency in microseconds (or build time for index-cost rows) and ``derived``
+packs recall/selectivity/etc as ``k=v|k=v``.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.baselines import Acorn, HiPNG, PostFilterHNSW, PreFilter
+from repro.core import EntryTable, build_udg, search_query
+from repro.data import (
+    generate_queries,
+    ground_truth,
+    make_dataset,
+    make_queries_vectors,
+    recall_at_k,
+)
+
+BIG = os.environ.get("REPRO_BENCH_SCALE", "") == "big"
+N = 24000 if BIG else 4000
+DIM = 48 if BIG else 32
+NQ = 64 if BIG else 32
+K = 10
+
+_dataset_cache: Dict = {}
+_index_cache: Dict = {}
+
+
+def emit(name: str, us_per_call: float, **derived) -> None:
+    d = "|".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}", flush=True)
+
+
+def dataset(distribution: str = "uniform", n: int = N, dim: int = DIM,
+            seed: int = 0):
+    key = (distribution, n, dim, seed)
+    if key not in _dataset_cache:
+        _dataset_cache[key] = make_dataset(n, dim, distribution=distribution,
+                                           seed=seed)
+    return _dataset_cache[key]
+
+
+def queries(vectors, s, t, relation: str, sigma: float, nq: int = NQ,
+            seed: int = 1):
+    qv = make_queries_vectors(nq, vectors.shape[1], seed=seed)
+    qs = generate_queries(qv, s, t, relation, sigma, k=K, seed=seed + 1)
+    return ground_truth(qs, vectors, s, t)
+
+
+class UDGMethod:
+    """Adapter giving UDG the same build/search protocol as the baselines."""
+
+    name = "udg"
+
+    def __init__(self, M=16, Z=64, K_p=8, leap="maxleap", patch="full"):
+        self.kw = dict(M=M, Z=Z, K_p=K_p, leap=leap, patch=patch)
+
+    def build(self, vectors, s, t, relation):
+        t0 = time.perf_counter()
+        self.g, rep = build_udg(vectors, s, t, relation, **self.kw)
+        self.et = EntryTable(self.g)
+        self.build_seconds = time.perf_counter() - t0
+        self.index_bytes = self.g.stats().index_bytes
+        return self
+
+    def search(self, q, s_q, t_q, k, ef):
+        return search_query(self.g, q, s_q, t_q, k, ef, self.et)
+
+
+def get_method(kind: str, relation: str, data_key=("uniform", N, DIM, 0),
+               **kw):
+    """Build-once cache across benchmark files."""
+    key = (kind, relation, data_key, tuple(sorted(kw.items())))
+    if key not in _index_cache:
+        vecs, s, t = dataset(data_key[0], data_key[1], data_key[2], data_key[3])
+        m = {
+            "udg": lambda: UDGMethod(**kw),
+            "postfilter": lambda: PostFilterHNSW(**kw),
+            "prefilter": lambda: PreFilter(),
+            "acorn": lambda: Acorn(**kw),
+            "hipng": lambda: HiPNG(**kw),
+        }[kind]()
+        m.build(vecs, s, t, relation)
+        _index_cache[key] = m
+    return _index_cache[key]
+
+
+def measure(method, qs, ef: int) -> Tuple[float, float]:
+    """(recall@10, mean µs/query) for one operating point."""
+    res = np.full((qs.nq, K), -1, dtype=np.int64)
+    t0 = time.perf_counter()
+    for i in range(qs.nq):
+        ids, _ = method.search(qs.vectors[i], qs.s_q[i], qs.t_q[i], K, ef)
+        res[i, : len(ids)] = ids[:K]
+    dt = (time.perf_counter() - t0) / qs.nq
+    return recall_at_k(res, qs), dt * 1e6
+
+
+def pareto_sweep(method, qs, efs=(8, 16, 32, 64, 128, 256)):
+    """Recall/latency across query-time params; returns the best point at
+    recall >= 0.9 plus the max-recall point (frontier summary)."""
+    points = [measure(method, qs, ef) for ef in efs]
+    good = [p for p in points if p[0] >= 0.9]
+    best_fast = min(good, key=lambda p: p[1]) if good else max(points)
+    best_recall = max(points, key=lambda p: (p[0], -p[1]))
+    return points, best_fast, best_recall

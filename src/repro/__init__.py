@@ -1,0 +1,10 @@
+"""repro: Unified Dominance Graph (UDG) for Interval-Predicate ANNS,
+built as a production multi-pod JAX framework.
+
+Subpackages: core (the paper's contribution), baselines, data, kernels
+(Pallas), search (batched device search), serve (distributed serving),
+models + configs (10-architecture LM substrate), train, distributed,
+launch (mesh / dry-run / roofline / launchers). See README.md, DESIGN.md,
+EXPERIMENTS.md.
+"""
+__version__ = "1.0.0"

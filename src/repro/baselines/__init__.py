@@ -1,0 +1,24 @@
+"""Hybrid-search baselines from the paper's evaluation (§VI-A):
+
+  PostFilter-HNSW  global proximity graph, oversampled search, post filter
+  PreFilter        exact valid-set enumeration + brute-force scan
+  ACORN            predicate-agnostic graph (gamma-expanded neighbor lists,
+                   predicate-filtered traversal)
+  Hi-PNG           containment-specific hierarchical interval partition
+                   navigating graph (reimplemented from its description)
+"""
+from repro.baselines.common import ProximityGraph, build_knn_graph, graph_search
+from repro.baselines.postfilter import PostFilterHNSW
+from repro.baselines.prefilter import PreFilter
+from repro.baselines.acorn import Acorn
+from repro.baselines.hipng import HiPNG
+
+__all__ = [
+    "Acorn",
+    "HiPNG",
+    "PostFilterHNSW",
+    "PreFilter",
+    "ProximityGraph",
+    "build_knn_graph",
+    "graph_search",
+]

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    dtype_of,
+    shape_supported,
+)
+from repro.configs.registry import ARCH_NAMES, all_configs, get_config
+
+__all__ = [
+    "ARCH_NAMES",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "all_configs",
+    "dtype_of",
+    "get_config",
+    "shape_supported",
+]

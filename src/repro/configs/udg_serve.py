@@ -1,0 +1,26 @@
+"""udg-serve: the paper's own system as a dry-run cell.
+
+Production serving configuration lowered by ``launch/dryrun.py --arch
+udg-serve``: a 16.7M x 768 database sharded 16-way over the ``model`` axis
+(65536 vectors per shard, each shard its own UDG), padded labeled degree 96,
+4096-query batches over the data(/pod) axes, beam 64, k 10. Variants
+(merge schedule, vector dtype, beam, degree) are CLI flags; results live in
+``experiments/dryrun/udg-serve.*.json`` and EXPERIMENTS.md §Perf.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class UdgServeConfig:
+    n_per_shard: int = 65536
+    dim: int = 768
+    degree: int = 96
+    batch: int = 4096
+    k: int = 10
+    beam: int = 64
+    relation: str = "containment"
+    merge: str = "all_gather"      # all_gather | tournament
+    vec_dtype: str = "f32"         # f32 | bf16
+
+
+CONFIG = UdgServeConfig()

@@ -1,0 +1,53 @@
+"""UDG core: the paper's primary contribution.
+
+Public surface:
+  - relations / dominance mapping: ``get_relation``, ``RELATIONS``,
+    ``DominanceSpace`` (paper §II-A, §III, Table II, Lemma 1)
+  - index: ``LabeledGraph`` (§IV-A), ``EntryTable``
+  - construction: ``build_udg`` (practical, §V), ``build_udg_exact``
+    (Algorithm 3 / Theorem 1), ``build_index``
+  - search: ``udg_search`` (Algorithm 2), ``search_query``
+"""
+from repro.core.build import (
+    BuildReport,
+    build_dedicated_reference,
+    build_index,
+    build_udg,
+    build_udg_exact,
+)
+from repro.core.entry import ConstructionEntry, EntryTable
+from repro.core.graph import GraphStats, LabeledGraph
+from repro.core.patch import PATCH_VARIANTS, add_patch_edges
+from repro.core.predicates import (
+    RELATIONS,
+    DominanceSpace,
+    RelationMapping,
+    canonical_state_for_query,
+    get_relation,
+)
+from repro.core.prune import prune, squared_dists
+from repro.core.search import SearchStats, search_query, udg_search
+
+__all__ = [
+    "BuildReport",
+    "ConstructionEntry",
+    "DominanceSpace",
+    "EntryTable",
+    "GraphStats",
+    "LabeledGraph",
+    "PATCH_VARIANTS",
+    "RELATIONS",
+    "RelationMapping",
+    "SearchStats",
+    "add_patch_edges",
+    "build_dedicated_reference",
+    "build_index",
+    "build_udg",
+    "build_udg_exact",
+    "canonical_state_for_query",
+    "get_relation",
+    "prune",
+    "search_query",
+    "squared_dists",
+    "udg_search",
+]

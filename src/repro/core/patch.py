@@ -1,0 +1,119 @@
+"""Validity-preserving patch edges (paper §V-B).
+
+When the practical constructor's sweep for an inserted object ``v`` stops
+early (no broad-pool candidate remains valid), the canonical X thresholds in
+``[a_L, a_R] = [a_L, X(v)]`` form an *uncovered range*: the active graph
+there may be under-connected. Patch edges repair it:
+
+  * repair pool = previously inserted objects with ``X_u >= a_L`` (valid at
+    the start of the range), capped at ``M * K_p`` keeping the longest-lived
+    candidates (largest ``X_u``);
+  * up to two *lifetime anchors* reserved purely by lifetime rank;
+  * remaining slots by ascending distance with HNSW-style diversity pruning;
+  * backfill with nearest remaining candidates if fewer than M survive;
+  * each edge (v, u) is labeled ``(a_L, min{X_v, X_u, a_R})`` on X and
+    ``[Y_v, Y(v_n)]`` on Y, so both endpoints of an active patch edge are
+    valid (the same argument as Lemma 2).
+
+Variants implement the Fig. 7 ablation:
+  ``none``      NoPatch
+  ``previous``  most-recent valid objects, no lifetime/distance logic
+  ``lifetime``  lifetime-capped pool + distance diversity, no anchors
+  ``full``      UDG-Patch (anchors + lifetime pool + diversity + backfill)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import LabeledGraph
+from repro.core.prune import squared_dists
+
+PATCH_VARIANTS = ("none", "previous", "lifetime", "full")
+
+
+def _diversity_prune(
+    vectors: np.ndarray, o_vec: np.ndarray, ids: np.ndarray, dists: np.ndarray, budget: int
+) -> list[int]:
+    """Algorithm 1 lines 4-9 applied to a pre-sorted candidate list."""
+    kept: list[int] = []
+    kept_d: list[float] = []
+    for u, du in zip(ids, dists):
+        if len(kept) >= budget:
+            break
+        if kept:
+            w = np.asarray(kept, dtype=np.int64)
+            dw = np.asarray(kept_d)
+            wu = squared_dists(vectors, vectors[u], w)
+            if np.any((dw < du) & (wu < du)):
+                continue
+        kept.append(int(u))
+        kept_d.append(float(du))
+    return kept
+
+
+def add_patch_edges(
+    g: LabeledGraph,
+    vj: int,
+    a_L: int,
+    a_R: int,
+    inserted_ids: np.ndarray,
+    inserted_x: np.ndarray,
+    M: int,
+    K_p: int,
+    variant: str = "full",
+) -> int:
+    """Emit patch edges for the uncovered range [a_L, a_R] of node ``vj``.
+
+    ``inserted_ids``/``inserted_x`` list previously inserted objects and
+    their canonical X ranks *in insertion order*. Returns #patch neighbors.
+    """
+    if variant == "none":
+        return 0
+    pool_mask = inserted_x >= a_L
+    pool = inserted_ids[pool_mask]
+    if pool.size == 0:
+        return 0
+
+    if variant == "previous":
+        sel = pool[-M:][::-1].tolist()  # most recently inserted, no scoring
+    else:
+        pool_x = g.x_rank[pool]
+        cap = M * K_p
+        if pool.size > cap:
+            # keep longest-lived candidates (largest X); ties -> most recent
+            keep = np.lexsort((-np.arange(pool.size), -pool_x))[:cap]
+            pool = pool[keep]
+            pool_x = pool_x[keep]
+        o_vec = g.vectors[vj]
+        dists = squared_dists(g.vectors, o_vec, pool)
+
+        sel: list[int] = []
+        rest_ids, rest_d = pool, dists
+        if variant == "full" and pool.size > 0:
+            # reserve up to two lifetime anchors by lifetime rank alone
+            n_anchor = min(2, pool.size)
+            anchor_order = np.lexsort((dists, -pool_x))[:n_anchor]
+            sel = [int(pool[i]) for i in anchor_order]
+            rest_mask = np.ones(pool.size, dtype=bool)
+            rest_mask[anchor_order] = False
+            rest_ids, rest_d = pool[rest_mask], dists[rest_mask]
+        order = np.lexsort((rest_ids, rest_d))
+        rest_ids, rest_d = rest_ids[order], rest_d[order]
+        budget = M - len(sel)
+        metric = _diversity_prune(g.vectors, o_vec, rest_ids, rest_d, budget)
+        sel.extend(metric)
+        if len(sel) < M:  # backfill with nearest remaining pool members
+            chosen = set(sel)
+            for u in rest_ids:
+                if len(sel) >= M:
+                    break
+                if int(u) not in chosen:
+                    sel.append(int(u))
+                    chosen.add(int(u))
+
+    y_max = g.num_y - 1
+    b = int(g.y_rank[vj])
+    for u in sel:
+        r = int(min(g.x_rank[vj], g.x_rank[u], a_R))
+        g.add_bidirectional(vj, int(u), a_L, r, b, y_max, patch=True)
+    return len(sel)

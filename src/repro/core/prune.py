@@ -1,0 +1,59 @@
+"""Algorithm 1: PRUNE — HNSW-style diversity pruning.
+
+Deterministic: candidates are scanned in ascending (distance, id) order; a
+candidate ``u`` is dominated when an already-kept neighbor ``w`` satisfies
+``d(o, w) < d(o, u)`` and ``d(w, u) < d(o, u)`` (strict, as in the paper).
+Determinism is what lets Theorem 1 equate UDG's per-state subgraphs with the
+dedicated graphs.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def squared_dists(vectors: np.ndarray, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Squared L2 from ``q`` to ``vectors[ids]`` (float32 accumulate)."""
+    diff = vectors[ids] - q
+    return np.einsum("ij,ij->i", diff, diff)
+
+
+def prune(
+    vectors: np.ndarray,
+    o: int | np.ndarray,
+    cand_ids: Sequence[int] | np.ndarray,
+    cand_dists: np.ndarray | None,
+    M: int,
+) -> np.ndarray:
+    """Return <=M diversified neighbor ids for object ``o`` (Algorithm 1).
+
+    ``o`` may be a node id or a raw vector (the object being inserted).
+    ``cand_dists`` are squared distances from ``o`` to the candidates; if
+    None they are computed here.
+    """
+    cand_ids = np.asarray(cand_ids, dtype=np.int64)
+    if cand_ids.size == 0:
+        return cand_ids.astype(np.int32)
+    o_vec = vectors[o] if np.ndim(o) == 0 else np.asarray(o, dtype=vectors.dtype)
+    if cand_dists is None:
+        cand_dists = squared_dists(vectors, o_vec, cand_ids)
+    # Ascending distance, ties broken by object id (paper line 2).
+    order = np.lexsort((cand_ids, cand_dists))
+    cand_ids = cand_ids[order]
+    cand_dists = cand_dists[order]
+
+    kept: list[int] = []
+    kept_dists: list[float] = []
+    for u, du in zip(cand_ids, cand_dists):
+        if kept:
+            w = np.asarray(kept, dtype=np.int64)
+            dw = np.asarray(kept_dists)
+            wu = squared_dists(vectors, vectors[u], w)
+            if np.any((dw < du) & (wu < du)):
+                continue
+        kept.append(int(u))
+        kept_dists.append(float(du))
+        if len(kept) >= M:
+            break
+    return np.asarray(kept, dtype=np.int32)

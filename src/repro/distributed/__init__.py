@@ -1,0 +1,17 @@
+"""Distributed runtime: sharding rules, collectives, gradient compression,
+fault handling."""
+from repro.distributed.sharding import (
+    batch_spec,
+    cache_specs,
+    logits_spec,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "batch_spec",
+    "cache_specs",
+    "logits_spec",
+    "opt_state_specs",
+    "param_specs",
+]

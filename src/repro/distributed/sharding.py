@@ -1,0 +1,203 @@
+"""Logical-axis sharding rules → PartitionSpecs for every pytree we jit.
+
+Policy (GSPMD, FSDP + TP + EP):
+  * every weight matrix is sharded on BOTH the fsdp axis ("data", plus
+    "pod" multi-pod) and the tensor axis ("model") — ZeRO-3: XLA inserts
+    all-gathers on use and reduce-scatters on grads;
+  * the tensor axis follows Megatron convention: column-parallel on the
+    d_model -> hidden projections, row-parallel on hidden -> d_model;
+  * MoE expert tensors put the *expert* dimension on "model" (EP); the
+    dispatch/combine einsums then lower to all-to-alls;
+  * vocab/embedding tables are vocab-sharded on "model";
+  * small vectors (norms, biases, per-head scalars) replicate;
+  * batch dims shard over ("pod","data"); KV caches additionally shard
+    heads over "model"; SSM states shard d_inner over "model".
+
+Rules are matched by leaf *name* (the last pytree key), with dim specs
+aligned to the trailing dimensions — leading stack dims (layer scan, expert
+stacks, codebooks) are padded with None automatically.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _fsdp(mesh) -> object:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# leaf-name -> spec for the TRAILING dims (None-padded on the left at apply)
+def _rules(fsdp) -> Dict[str, Tuple]:
+    return {
+        # embeddings / heads: vocab on model, d_model on fsdp
+        "table": ("model", fsdp),
+        "heads": ("model", fsdp),          # musicgen [K, D, V] -> pad left
+        # attention projections
+        "wq": (fsdp, "model"),
+        "wk": (fsdp, "model"),
+        "wv": (fsdp, "model"),
+        "wo": ("model", fsdp),
+        # dense MLP
+        "w_in": (fsdp, "model"),
+        "w_gate": (fsdp, "model"),
+        "w_out": ("model", fsdp),
+        # MoE: expert dim on model (EP), d_model on fsdp
+        "router": (fsdp, None),
+        "e_in": ("model", fsdp, None),
+        "e_gate": ("model", fsdp, None),
+        "e_out": ("model", None, fsdp),
+        "s_in": (fsdp, "model"),
+        "s_gate": (fsdp, "model"),
+        "s_out": ("model", fsdp),
+        # SSM: d_inner on model
+        "in_proj": (fsdp, "model"),
+        "x_proj": ("model", None),
+        "dt_proj": (None, "model"),
+        "out_proj": ("model", fsdp),
+        "conv_w": (None, "model"),
+        "conv_b": ("model",),
+        "A_log": None,                     # [di, ds] m1 / [nh] m2: replicate
+        "dt_bias": None,
+        "D": None,
+        # norms
+        "scale": None,
+    }
+
+
+def _spec_for(name: str, ndim: int, rules) -> P:
+    rule = rules.get(name, None)
+    if rule is None:
+        return P()
+    rule = tuple(rule)
+    if ndim < len(rule):  # scalar-ish leaf that matched a matrix rule
+        return P()
+    pad = (None,) * (ndim - len(rule))
+    return P(*(pad + rule))
+
+
+def param_specs(params, cfg: ModelConfig, mesh):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    rules = _rules(_fsdp(mesh))
+
+    def spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        nd = len(leaf.shape)
+        # special-case musicgen heads at top level: [K, D, V]
+        if name == "heads":
+            return P(None, _fsdp(mesh), "model")
+        return _spec_for(name or "", nd, rules)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def opt_state_specs(opt_state, params_specs):
+    """AdamW state mirrors the parameter specs (step scalar replicated)."""
+    from repro.train.optimizer import AdamWState
+
+    assert isinstance(opt_state, AdamWState) or hasattr(opt_state, "mu")
+    return type(opt_state)(
+        step=P(),
+        mu=params_specs,
+        nu=params_specs,
+        master=params_specs,
+    )
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return int(mesh.shape[axes])
+    n = 1
+    for a in axes:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def _pick_batch(mesh, b: int):
+    """Largest batch-parallel axis set that divides b (None = replicate).
+
+    long_500k has global_batch=1 — an unshardable batch is replicated and
+    the cache's sequence dim takes the model axis instead."""
+    for cand in (_fsdp(mesh), "data", "pod" if "pod" in mesh.axis_names else None):
+        if cand is None:
+            continue
+        if b % _axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def _model_if_divisible(mesh, n: int):
+    return "model" if n % _axis_size(mesh, "model") == 0 else None
+
+
+def batch_spec(mesh, shape) -> P:
+    """Token batches: batch dim over the largest divisible DP axis set."""
+    return P(_pick_batch(mesh, shape[0]), *([None] * (len(shape) - 1)))
+
+
+def logits_spec(mesh, shape) -> P:
+    """[B, ..., V]: batch over DP axes, vocab over model when divisible."""
+    return P(
+        _pick_batch(mesh, shape[0]),
+        *([None] * (len(shape) - 2)),
+        _model_if_divisible(mesh, shape[-1]),
+    )
+
+
+def cache_specs(cache, cfg: ModelConfig, mesh):
+    """Decode-state sharding, shape-aware.
+
+    KV tensors [stack.., B, S, KV, hd]: heads on "model" when divisible,
+    otherwise the sequence dim takes "model" (sequence-sharded cache — the
+    standard fallback for few-KV-head models on wide meshes). SSM conv
+    [stack.., B, K-1, C] shards channels; SSM h shards d_inner / heads.
+    """
+
+    def spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            B, S, KV, _hd = leaf.shape[nd - 4:]
+            pad = (None,) * (nd - 4)
+            b_ax = _pick_batch(mesh, B)
+            kv_ax = _model_if_divisible(mesh, KV)
+            s_ax = None if kv_ax else _model_if_divisible(mesh, S)
+            return P(*pad, b_ax, s_ax, kv_ax, None)
+        if name == "pos":
+            # ring-buffer slot positions [stack..., B, W]
+            B = leaf.shape[nd - 2]
+            pad = (None,) * (nd - 2)
+            return P(*pad, _pick_batch(mesh, B), None)
+        if name == "conv":
+            B, _K, C = leaf.shape[nd - 3:]
+            pad = (None,) * (nd - 3)
+            return P(*pad, _pick_batch(mesh, B), None, _model_if_divisible(mesh, C))
+        if name == "h":
+            if cfg.ssm_kind == "mamba2":
+                B, NH, _hd, _ds = leaf.shape[nd - 4:]
+                pad = (None,) * (nd - 4)
+                return P(*pad, _pick_batch(mesh, B),
+                         _model_if_divisible(mesh, NH), None, None)
+            B, DI, _ds = leaf.shape[nd - 3:]
+            pad = (None,) * (nd - 3)
+            return P(*pad, _pick_batch(mesh, B),
+                     _model_if_divisible(mesh, DI), None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

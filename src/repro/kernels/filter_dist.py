@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused edge-label validity test + squared distance.
+
+This is the inner loop of UDGSearch (paper Alg. 2 lines 8-9) adapted to the
+TPU execution model: instead of branching per edge (cheap on CPU, poison on
+the VPU), the label-containment test becomes a predication mask fused into
+the distance computation — invalid neighbors come back with +inf distance
+and are annihilated by the subsequent top-k. Fusing the two passes means the
+gathered candidate tile is read from VMEM exactly once.
+
+Block layout: grid (B, E/TE). Per step the kernel sees one query row
+(1, D), a (TE, D) candidate tile, the (TE, 4) int32 label rectangles, the
+(1, 2) int32 canonical state, and the (TE,) candidate ids (for padding).
+The cross term q.cT is a (TE, D) x (D, 1) MXU matvec.
+
+VMEM at defaults (TE=128, D<=2048 f32): 1 MiB candidates + 8 KiB query —
+comfortably double-buffered.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TE = 128  # candidate-tile rows
+
+
+def _filter_dist_kernel(q_ref, cand_ref, lab_ref, state_ref, ids_ref, out_ref):
+    q = q_ref[0].astype(jnp.float32)                  # [D]
+    cand = cand_ref[0].astype(jnp.float32)            # [TE, D]
+    lab = lab_ref[0]                                  # [TE, 4] int32
+    a = state_ref[0, 0]
+    c = state_ref[0, 1]
+    ids = ids_ref[0]                                  # [TE]
+
+    cross = jax.lax.dot_general(
+        cand, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                                           # [TE] via MXU matvec
+    cs = jnp.sum(cand * cand, axis=1)
+    qs = jnp.sum(q * q)
+    dist = cs - 2.0 * cross + qs
+
+    ok = (
+        (lab[:, 0] <= a) & (a <= lab[:, 1])
+        & (lab[:, 2] <= c) & (c <= lab[:, 3])
+        & (ids >= 0)
+    )
+    out_ref[0, :] = jnp.where(ok, dist, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "te"))
+def filter_dist_pallas(
+    q: jnp.ndarray,          # [B, D]
+    cand: jnp.ndarray,       # [B, E, D]
+    labels: jnp.ndarray,     # [B, E, 4] int32
+    state: jnp.ndarray,      # [B, 2] int32
+    cand_ids: jnp.ndarray,   # [B, E] int32, -1 padding
+    *,
+    interpret: bool = False,
+    te: int = TE,
+) -> jnp.ndarray:
+    b, e, d = cand.shape
+    pe = (-e) % te
+    if pe:
+        cand = jnp.pad(cand, ((0, 0), (0, pe), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pe), (0, 0)))
+        cand_ids = jnp.pad(cand_ids, ((0, 0), (0, pe)), constant_values=-1)
+    ep = cand.shape[1]
+    grid = (b, ep // te)
+    out = pl.pallas_call(
+        _filter_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, te, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, te, 4), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, te), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, te), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ep), jnp.float32),
+        interpret=interpret,
+    )(q, cand, labels, state, cand_ids)
+    return out[:, :e]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: squared-L2 against int8-quantized candidate vectors.
+
+Beyond-paper optimization (EXPERIMENTS.md §Perf): serving is HBM-bandwidth
+bound when the database does not fit VMEM — every beam expansion streams
+candidate vectors from HBM. Storing candidates as int8 with a per-vector
+scale cuts that traffic 4x versus f32 (2x vs bf16) at ~1e-3 relative
+distance error, which is far below the margin that changes a top-k at the
+beam sizes used here (rescoring hooks exist for exactness).
+
+Same tiling as l2dist; the int8 tile is dequantized in VMEM registers
+immediately before the MXU cross-term.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TQ = 128
+TC = 128
+TD = 512
+
+
+def quantize_int8(v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-vector symmetric int8 quantization: v ~ q * scale."""
+    amax = jnp.maximum(jnp.max(jnp.abs(v), axis=-1), 1e-12)
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(v / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_kernel(q_ref, c_ref, scale_ref, out_ref):
+    kd = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)                     # [TQ, TD]
+    c = c_ref[...].astype(jnp.float32) * scale_ref[...][:, None]  # dequant in VMEM
+    qs = jnp.sum(q * q, axis=1, keepdims=True)
+    cs = jnp.sum(c * c, axis=1)[None, :]
+    cross = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kd == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += qs - 2.0 * cross + cs
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tq", "tc", "td"))
+def int8_l2dist_pallas(
+    q: jnp.ndarray,        # [Bq, D] f32
+    c_q: jnp.ndarray,      # [Bc, D] int8
+    c_scale: jnp.ndarray,  # [Bc] f32
+    *,
+    interpret: bool = False,
+    tq: int = TQ,
+    tc: int = TC,
+    td: int = TD,
+) -> jnp.ndarray:
+    bq, d = q.shape
+    bc = c_q.shape[0]
+    pq = (-bq) % tq
+    pc = (-bc) % tc
+    pd = (-d) % td
+    qp = jnp.pad(q, ((0, pq), (0, pd)))
+    cp = jnp.pad(c_q, ((0, pc), (0, pd)))
+    sp = jnp.pad(c_scale, (0, pc))
+    grid = (qp.shape[0] // tq, cp.shape[0] // tc, qp.shape[1] // td)
+    out = pl.pallas_call(
+        _int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, td), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tc, td), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tc,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tq, tc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], cp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(qp, cp, sp)
+    return out[:bq, :bc]

@@ -1,0 +1,55 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the compiled kernels run natively; on CPU (this container) they run
+under ``interpret=True``, which executes the kernel body in Python for
+correctness validation. ``use_ref=True`` routes to the pure-jnp oracle —
+used both as a fallback and by the benchmark harness to quantify kernel
+speedups.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.filter_dist import filter_dist_pallas
+from repro.kernels.int8dist import int8_l2dist_pallas, quantize_int8
+from repro.kernels.l2dist import l2dist_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def l2dist(q: jnp.ndarray, c: jnp.ndarray, *, use_ref: bool = False) -> jnp.ndarray:
+    """Squared-L2 distance matrix [Bq, Bc]."""
+    if use_ref:
+        return ref.l2dist_ref(q, c)
+    return l2dist_pallas(q, c, interpret=_on_cpu())
+
+
+def filter_dist(
+    q: jnp.ndarray,
+    cand: jnp.ndarray,
+    labels: jnp.ndarray,
+    state: jnp.ndarray,
+    cand_ids: jnp.ndarray,
+    *,
+    use_ref: bool = False,
+) -> jnp.ndarray:
+    """Fused label-validity + squared distance [B, E] (+inf = inactive)."""
+    if use_ref:
+        return ref.filter_dist_ref(q, cand, labels, state, cand_ids)
+    return filter_dist_pallas(q, cand, labels, state, cand_ids, interpret=_on_cpu())
+
+
+def int8_l2dist(
+    q: jnp.ndarray, c_q: jnp.ndarray, c_scale: jnp.ndarray, *, use_ref: bool = False
+) -> jnp.ndarray:
+    """Squared-L2 against int8-quantized candidates [Bq, Bc]."""
+    if use_ref:
+        return ref.int8_l2dist_ref(q, c_q, c_scale)
+    return int8_l2dist_pallas(q, c_q, c_scale, interpret=_on_cpu())
+
+
+__all__ = ["filter_dist", "int8_l2dist", "l2dist", "quantize_int8"]

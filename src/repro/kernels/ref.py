@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py`` and the fallback implementation on backends
+without Pallas support.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def l2dist_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distance matrix. q: [Bq, D], c: [Bc, D] -> [Bq, Bc] f32."""
+    q = q.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    qs = jnp.sum(q * q, axis=-1, keepdims=True)       # [Bq, 1]
+    cs = jnp.sum(c * c, axis=-1)[None, :]             # [1, Bc]
+    return qs - 2.0 * (q @ c.T) + cs
+
+
+def filter_dist_ref(
+    q: jnp.ndarray,           # [B, D] query vectors
+    cand: jnp.ndarray,        # [B, E, D] gathered candidate vectors
+    labels: jnp.ndarray,      # [B, E, 4] int32 label rectangles (l, r, b, e)
+    state: jnp.ndarray,       # [B, 2] int32 canonical rank state (a, c)
+    cand_ids: jnp.ndarray,    # [B, E] int32 (-1 = padding)
+) -> jnp.ndarray:
+    """Fused edge-label validity + squared distance (paper Alg. 2 line 9).
+
+    Returns [B, E] f32: squared L2 where the tuple is active for (a, c),
+    +inf otherwise (so invalid neighbors never enter the beam).
+    """
+    q = q.astype(jnp.float32)
+    cand = cand.astype(jnp.float32)
+    diff = cand - q[:, None, :]
+    dist = jnp.sum(diff * diff, axis=-1)
+    a = state[:, 0:1]
+    cc = state[:, 1:2]
+    ok = (
+        (labels[..., 0] <= a)
+        & (a <= labels[..., 1])
+        & (labels[..., 2] <= cc)
+        & (cc <= labels[..., 3])
+        & (cand_ids >= 0)
+    )
+    return jnp.where(ok, dist, INF)
+
+
+def int8_l2dist_ref(
+    q: jnp.ndarray,        # [Bq, D] f32 queries
+    c_q: jnp.ndarray,      # [Bc, D] int8 quantized candidates
+    c_scale: jnp.ndarray,  # [Bc] f32 per-vector dequant scales
+) -> jnp.ndarray:
+    """Squared L2 against int8-quantized vectors (c ~ c_q * scale)."""
+    c = c_q.astype(jnp.float32) * c_scale[:, None]
+    return l2dist_ref(q, c)

@@ -1,0 +1,469 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import: jax locks the device
+# count at first initialization, and the production meshes below need 512
+# host-platform placeholder devices (dry-run only — no allocation happens;
+# everything is lowered from ShapeDtypeStructs).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, ModelConfig, get_config, shape_supported  # noqa: E402
+from repro.configs.registry import ARCH_NAMES  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    batch_spec,
+    cache_specs,
+    logits_spec,
+    opt_state_specs,
+    param_specs,
+)
+from repro.launch import hlo as hlo_lib  # noqa: E402
+from repro.launch import roofline as roof_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import (  # noqa: E402
+    decode_step,
+    init_decode_state,
+    init_params_shapes,
+    make_train_step,
+    prefill_step,
+)
+from repro.train import adamw  # noqa: E402
+
+S32 = jnp.int32
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    train:   {tokens, labels}            [GB, S](, K) int32
+    prefill: {tokens}                    [GB, S](, K) int32
+    decode:  {tokens [GB, 1](, K), pos [GB]} (+ the decode state, built
+             separately because its structure is family-dependent)
+    """
+    sh = SHAPES[shape_name]
+    tok_shape: Tuple[int, ...] = (sh.global_batch, sh.seq_len)
+    if sh.kind == "decode":
+        tok_shape = (sh.global_batch, 1)
+    if cfg.num_codebooks > 1:
+        tok_shape = tok_shape + (cfg.num_codebooks,)
+    specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, S32)}
+    if sh.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(tok_shape, S32)
+    if sh.kind == "decode":
+        specs["pos"] = jax.ShapeDtypeStruct((sh.global_batch,), S32)
+    return specs
+
+
+def _sharded(tree_shapes, tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)
+        ),
+        tree_shapes,
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _active_params(cfg: ModelConfig, total: int) -> int:
+    if not cfg.is_moe:
+        return total
+    mats = 3 if cfg.mlp_type == "swiglu" else 2
+    per_expert = cfg.d_model * cfg.d_ff_expert * mats
+    dead = cfg.num_layers * (cfg.num_experts - cfg.top_k) * per_expert
+    return total - dead
+
+
+def _lower_step(cfg: ModelConfig, shape_name: str, mesh):
+    """Build + lower the cell's step; returns (lowered, tokens_per_step)."""
+    sh = SHAPES[shape_name]
+    params_sh = init_params_shapes(cfg)
+    pspecs = param_specs(params_sh, cfg, mesh)
+    ins = input_specs(cfg, shape_name)
+    bspec_tok = batch_spec(mesh, ins["tokens"].shape)
+    vshape = ((sh.global_batch, cfg.num_codebooks, cfg.vocab_size)
+              if cfg.num_codebooks > 1 else (sh.global_batch, cfg.vocab_size))
+    ns = lambda tree: jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree)
+    if sh.kind == "train":
+        opt = adamw(lr=3e-4)
+        opt_sh = jax.eval_shape(opt.init, params_sh)
+        ospecs = opt_state_specs(opt_sh, pspecs)
+        step = make_train_step(cfg, opt)
+        jitted = jax.jit(
+            step,
+            in_shardings=(ns(pspecs), ns(ospecs),
+                          {"tokens": NamedSharding(mesh, bspec_tok),
+                           "labels": NamedSharding(mesh, bspec_tok)}),
+            out_shardings=(ns(pspecs), ns(ospecs), NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(
+            params_sh, opt_sh, {"tokens": ins["tokens"], "labels": ins["labels"]}
+        )
+        tokens = sh.global_batch * sh.seq_len
+    elif sh.kind == "prefill":
+        def pf(params, tokens):
+            return prefill_step(params, cfg, tokens)
+        cache_sh = jax.eval_shape(
+            lambda: init_decode_state(cfg, sh.global_batch, sh.seq_len)
+        )
+        cspecs = cache_specs(cache_sh, cfg, mesh)
+        jitted = jax.jit(
+            pf,
+            in_shardings=(ns(pspecs), NamedSharding(mesh, bspec_tok)),
+            out_shardings=(NamedSharding(mesh, logits_spec(mesh, vshape)), ns(cspecs)),
+        )
+        lowered = jitted.lower(params_sh, ins["tokens"])
+        tokens = sh.global_batch * sh.seq_len
+    else:
+        cache_sh = jax.eval_shape(
+            lambda: init_decode_state(
+                cfg, sh.global_batch, sh.seq_len, ring_local=cfg.ring_local,
+            )
+        )
+        cspecs = cache_specs(cache_sh, cfg, mesh)
+
+        def dec(params, cache, tokens, pos):
+            return decode_step(params, cfg, cache, tokens, pos)
+
+        jitted = jax.jit(
+            dec,
+            in_shardings=(ns(pspecs), ns(cspecs), NamedSharding(mesh, bspec_tok),
+                          NamedSharding(mesh, batch_spec(mesh, ins["pos"].shape))),
+            out_shardings=(NamedSharding(mesh, logits_spec(mesh, vshape)), ns(cspecs)),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_sh, cache_sh, ins["tokens"], ins["pos"])
+        tokens = sh.global_batch
+    return lowered, tokens
+
+
+def _cell_unit(cfg: ModelConfig) -> int:
+    """Smallest depth (in layers) that preserves the superblock structure."""
+    if cfg.is_hybrid:
+        return cfg.hybrid_every
+    if cfg.attn_pattern == "local_global":
+        return cfg.global_every
+    return 1
+
+
+def _probe_cost(cfg: ModelConfig, shape_name: str, mesh, units: int) -> Dict:
+    """Compile an unrolled shallow variant and return its cost terms.
+
+    HLO cost analysis counts a lax.scan body once, so the full (scanned)
+    artifact under-reports per-step work by ~G. Two unrolled probes at
+    1 and 2 depth units give cost(L) = const + L * per_unit exactly."""
+    import dataclasses as dc
+    unit = _cell_unit(cfg)
+    pcfg = dc.replace(cfg, num_layers=units * unit, unroll_layers=True)
+    lowered, _ = _lower_step(pcfg, shape_name, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost = dict(cost) if cost else {}
+    coll = hlo_lib.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def _extrapolate(p1: Dict, p2: Dict, G: int) -> Dict:
+    """cost(G) from probes at 1 and 2 units: p1 + (G-1) * (p2 - p1)."""
+    out = {
+        "flops": p1["flops"] + (G - 1) * (p2["flops"] - p1["flops"]),
+        "bytes accessed": p1["bytes"] + (G - 1) * (p2["bytes"] - p1["bytes"]),
+    }
+    coll: Dict[str, float] = {}
+    keys = set(p1["coll"]) | set(p2["coll"])
+    for k in keys:
+        a = p1["coll"].get(k, 0)
+        b = p2["coll"].get(k, 0)
+        coll[k] = max(a + (G - 1) * (b - a), 0)
+    return {"cost": out, "coll": coll}
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    ring_local: bool = False,
+    remat: Optional[str] = None,
+    gather_weights: bool = False,
+    ssm_impl: Optional[str] = None,
+    extra_tag: str = "",
+) -> Dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    cfg = get_config(arch)
+    import dataclasses
+    repl = {}
+    if remat is not None:
+        repl["remat"] = remat
+    if gather_weights:
+        repl["gather_weights"] = True
+    if ssm_impl:
+        repl["ssm_impl"] = ssm_impl
+    if ring_local:
+        repl["ring_local"] = True
+    if repl:
+        cfg = dataclasses.replace(cfg, **repl)
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec: Dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "kind": sh.kind, "ok": False, "tag": extra_tag,
+    }
+    ok, why = shape_supported(cfg, shape_name)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+    t0 = time.perf_counter()
+    try:
+        params_sh = init_params_shapes(cfg)
+        n_params = sum(
+            int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params_sh)
+        )
+        with mesh:
+            lowered, tokens = _lower_step(cfg, shape_name, mesh)
+            t_lower = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t1
+
+            mem = compiled.memory_analysis()
+            raw_cost = compiled.cost_analysis()
+            if isinstance(raw_cost, (list, tuple)):
+                raw_cost = raw_cost[0]
+            raw_cost = dict(raw_cost) if raw_cost else {}
+            raw_coll = hlo_lib.collective_bytes(compiled.as_text())
+
+            # unrolled shallow probes correct the scan-body-counted-once bias
+            G = cfg.layer_groups()[0]
+            t2 = time.perf_counter()
+            try:
+                p1 = _probe_cost(cfg, shape_name, mesh, 1)
+                p2 = _probe_cost(cfg, shape_name, mesh, 2)
+                ext = _extrapolate(p1, p2, G)
+                cost, coll = ext["cost"], ext["coll"]
+                probe_ok = True
+            except Exception as pe:  # fall back to raw scanned numbers
+                cost = {k: float(v) for k, v in raw_cost.items()
+                        if isinstance(v, (int, float))}
+                coll = raw_coll
+                probe_ok = False
+                rec["probe_error"] = f"{type(pe).__name__}: {pe}"
+            t_probe = time.perf_counter() - t2
+
+        terms = roof_lib.derive(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            cost=cost, coll=coll, kind=sh.kind, n_params=n_params,
+            n_active_params=_active_params(cfg, n_params), tokens=tokens,
+        )
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            probe_s=round(t_probe, 1),
+            probe_corrected=probe_ok,
+            n_params=n_params,
+            n_active_params=_active_params(cfg, n_params),
+            tokens_per_step=tokens,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            cost={k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float))},
+            cost_raw_scanned={k: float(v) for k, v in raw_cost.items()
+                              if isinstance(v, (int, float))},
+            collectives=coll,
+            collectives_raw_scanned=raw_coll,
+            roofline=terms.as_dict(),
+        )
+    except Exception as e:  # recorded, not raised: failures are bugs to fix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def run_udg_serving_cell(
+    multi_pod: bool,
+    *,
+    merge: str = "all_gather",
+    vec_dtype: str = "f32",
+    beam: int = 64,
+    degree: int = 96,
+) -> Dict:
+    """Dry-run the distributed UDG serving step at production scale.
+
+    Database: 16.7M vectors x 768 dims sharded over the model axis (65k per
+    shard), padded degree E, batch 4096 queries over the data(/pod) axes.
+
+    The search loop is a dynamic while; like the LM scan stacks, its body is
+    counted once by cost analysis — so two unrolled-iteration probes (1 and
+    2 expansions) give per-iteration cost exactly, extrapolated to the
+    expected ``beam`` expansions per query (each iteration expands one beam
+    slot; termination occurs once every slot is expanded)."""
+    from repro.serve.distributed import make_serving_step
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    tag = f"{merge}.{vec_dtype}.b{beam}.E{degree}"
+    rec: Dict = {
+        "arch": "udg-serve", "shape": "serve_16M", "mesh": mesh_name,
+        "chips": chips, "kind": "serve", "ok": False, "tag": tag,
+    }
+    try:
+        shards = mesh.shape["model"]
+        n_l, d, E, B, k = 65536, 768, degree, 4096, 10
+        ux = n_l
+        vdt = {"f32": jnp.float32, "bf16": jnp.bfloat16,
+               "int8": jnp.int8}[vec_dtype]
+        f32, i32 = jnp.float32, jnp.int32
+        sds = jax.ShapeDtypeStruct
+        args = (
+            sds((shards, n_l, d), vdt),          # vectors
+            sds((shards, n_l, E), i32),          # nbr
+            sds((shards, n_l, E, 4), i32),       # labels
+            sds((shards, ux), f32),              # U_X
+            sds((shards, ux), f32),              # U_Y
+            sds((shards,), i32),                 # num_y
+            sds((shards, ux), i32),              # entry_node
+            sds((shards, ux), i32),              # entry_y_rank
+            sds((B, d), f32),                    # q
+            sds((B,), f32),                      # xq
+            sds((B,), f32),                      # yq
+        )
+        if vec_dtype == "int8":
+            args = args + (sds((shards, n_l), f32),)   # dequant scales
+
+        def analyze(unroll):
+            step = make_serving_step(
+                mesh, "containment", k=k, beam=beam, merge=merge,
+                use_ref_kernel=True, unroll_iters=unroll,
+                int8_vectors=(vec_dtype == "int8"),
+            )
+            with mesh:
+                compiled = step.lower(*args).compile()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            cost = dict(cost) if cost else {}
+            return compiled, cost, hlo_lib.collective_bytes(compiled.as_text())
+
+        t0 = time.perf_counter()
+        compiled, cost_raw, _ = analyze(0)   # real artifact (while loop)
+        t_compile = time.perf_counter() - t0
+        _, c1, l1 = analyze(1)
+        _, c2, l2 = analyze(2)
+        p1 = {"flops": float(c1.get("flops", 0)),
+              "bytes": float(c1.get("bytes accessed", 0)), "coll": l1}
+        p2 = {"flops": float(c2.get("flops", 0)),
+              "bytes": float(c2.get("bytes accessed", 0)), "coll": l2}
+        ext = _extrapolate(p1, p2, beam)     # expected expansions = beam
+        cost, coll = ext["cost"], ext["coll"]
+
+        mem = compiled.memory_analysis()
+        terms = roof_lib.derive(
+            arch="udg-serve", shape="serve_16M", mesh=mesh_name,
+            chips=chips, cost=cost, coll=coll,
+            kind="serve", n_params=0, n_active_params=0, tokens=B,
+        )
+        rec.update(
+            ok=True, compile_s=round(t_compile, 1),
+            probe_corrected=True, expected_iters=beam,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            cost={kk: float(v) for kk, v in cost.items()
+                  if isinstance(v, (int, float))},
+            cost_raw_scanned={kk: float(v) for kk, v in cost_raw.items()
+                              if isinstance(v, (int, float))},
+            collectives=coll,
+            roofline=terms.as_dict(),
+        )
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all', or 'udg-serve'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--ring-local", action="store_true")
+    ap.add_argument("--gather-weights", action="store_true")
+    ap.add_argument("--ssm-impl", default=None, choices=[None, "scan", "ssd"])
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--merge", default="all_gather")
+    ap.add_argument("--vec-dtype", default="f32", choices=["f32", "bf16", "int8"])
+    ap.add_argument("--beam", type=int, default=64)
+    ap.add_argument("--degree", type=int, default=96)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for multi in meshes:
+            mesh_name = "pod2x16x16" if multi else "pod16x16"
+            if arch == "udg-serve":
+                rec = run_udg_serving_cell(
+                    multi, merge=args.merge, vec_dtype=args.vec_dtype,
+                    beam=args.beam, degree=args.degree,
+                )
+                fn = (f"{args.out}/udg-serve.{rec['tag']}.{mesh_name}.json")
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = "OK" if rec["ok"] else ("SKIP" if "skipped" in rec else "FAIL")
+                print(f"[{status}] udg-serve {args.merge} {mesh_name} "
+                      f"compile={rec.get('compile_s', '-')}s", flush=True)
+                continue
+            for shape in shapes:
+                rec = run_cell(
+                    arch, shape, multi,
+                    ring_local=args.ring_local,
+                    remat=args.remat, gather_weights=args.gather_weights,
+                    ssm_impl=args.ssm_impl, extra_tag=args.tag,
+                )
+                tag = f".{args.tag}" if args.tag else ""
+                fn = f"{args.out}/{arch}.{shape}.{mesh_name}{tag}.json"
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = "OK" if rec["ok"] else ("SKIP" if "skipped" in rec else "FAIL")
+                print(
+                    f"[{status}] {arch} {shape} {mesh_name} "
+                    f"compile={rec.get('compile_s', '-')}s "
+                    f"{rec.get('error', '')[:120]}",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""HLO-text analysis: collective-communication byte accounting.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+optimized (post-SPMD) HLO: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` op contributes
+the byte size of its operands. Async pairs (``*-start``/``*-done``) are
+counted once at the ``-start``. The optimized module is the per-device
+program, so the totals here are per-device bytes moved over ICI.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w\.\-_]+)\s*=\s*(.*)$")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device), plus op counts.
+
+    Returns {kind: bytes, ..., f"{kind}_count": int, "total": int}.
+    """
+    # symbol table: defined name -> result bytes (for bare-name operands)
+    defs: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result shapes appear before the opcode token
+        paren = rhs.find("(")
+        head = rhs[:paren] if paren > 0 else rhs
+        defs[name.lstrip("%")] = _shape_bytes(head)
+
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        for kind in COLLECTIVE_OPS:
+            # match `<kind>(` or `<kind>-start(`; skip -done (counted at start)
+            op_match = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if not op_match or f"{kind}-done" in rhs:
+                continue
+            args = rhs[op_match.end():]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            args = args[:end]
+            b = _shape_bytes(args)
+            if b == 0:  # operands given as bare names: look them up
+                for nm in re.findall(r"%([\w\.\-_]+)", args):
+                    b += defs.get(nm, 0)
+            out[kind] += b
+            out[f"{kind}_count"] += 1
+            break
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS if k in out)
+    return dict(out)

@@ -1,0 +1,99 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Hillclimb helper: compile a 1-unit unrolled probe of one cell and print the
+# largest collectives / most byte-heavy op shapes, so each perf hypothesis is
+# grounded in the actual lowered IR rather than guesswork.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import re            # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.dryrun import _cell_unit, _lower_step  # noqa: E402
+from repro.launch.hlo import _DEF_RE, _shape_bytes, COLLECTIVE_OPS  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--units", type=int, default=1)
+    ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--gather-weights", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    unit = _cell_unit(cfg)
+    repl = {"num_layers": args.units * unit, "unroll_layers": True}
+    if args.remat:
+        repl["remat"] = args.remat
+    if args.gather_weights:
+        repl["gather_weights"] = True
+    cfg = dataclasses.replace(cfg, **repl)
+    mesh = make_production_mesh()
+    with mesh:
+        lowered, _ = _lower_step(cfg, args.shape, mesh)
+        compiled = lowered.compile()
+    text = compiled.as_text()
+
+    # symbol table for bare-name operands (same fallback as launch.hlo)
+    defs = {}
+    for line in text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            rhs = m.group(2)
+            paren = rhs.find("(")
+            head = rhs[:paren] if paren > 0 else rhs
+            defs[m.group(1).lstrip("%")] = _shape_bytes(head)
+
+    rows = []
+    per_kind = defaultdict(int)
+    for line in text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        for kind in COLLECTIVE_OPS:
+            om = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if not om or f"{kind}-done" in rhs:
+                continue
+            paren = rhs[om.end():]
+            depth, end = 1, 0
+            for i, ch in enumerate(paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            args_txt = paren[:end]
+            b = _shape_bytes(args_txt)
+            if b == 0:
+                for nm in re.findall(r"%([\w\.\-_]+)", args_txt):
+                    b += defs.get(nm, 0)
+            mm = re.search(r'op_name="([^"]+)"', rhs)
+            rows.append((b, kind, (mm.group(1) if mm else "?")[:110]))
+            per_kind[kind] += b
+            break
+    rows.sort(reverse=True)
+    print(f"== {args.arch} {args.shape} probe({args.units} unit) "
+          f"collective bytes by kind ==")
+    for k, v in sorted(per_kind.items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v/1e9:8.2f} GB")
+    print(f"== top {args.top} collectives ==")
+    for b, kind, name in rows[: args.top]:
+        print(f"  {b/1e9:8.3f} GB  {kind:18s} {name}")
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    print(f"== cost: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Roofline-term derivation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e —
+  peak bf16 compute     197 TFLOP/s per chip
+  HBM bandwidth         819 GB/s per chip
+  ICI link bandwidth    ~50 GB/s per link
+
+The optimized HLO module analyzed by ``cost_analysis`` is the per-device
+SPMD program, so its FLOPs/bytes are already per-chip; the three terms
+  compute    = flops_per_chip / peak
+  memory     = hbm_bytes_per_chip / hbm_bw
+  collective = collective_bytes_per_chip / link_bw
+are mathematically identical to the spec's total/(chips x rate) form.
+
+MODEL_FLOPS uses 6*N*D for training (N = params, D = tokens; N_active for
+MoE) and 2*N*D for forward-only (prefill/decode) steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_total: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flops_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+
+    def finalize(self) -> "RooflineTerms":
+        self.compute_s = self.flops_per_chip / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes_per_chip / HBM_BW
+        self.collective_s = self.collective_bytes_per_chip / ICI_BW
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.bottleneck = max(terms, key=terms.get)  # type: ignore[arg-type]
+        total_hlo_flops = self.flops_per_chip * self.chips
+        self.useful_flops_ratio = (
+            self.model_flops_total / total_hlo_flops if total_hlo_flops else 0.0
+        )
+        # fraction of the compute roofline realized if the step runs at the
+        # bound given by its dominant term: useful_time / bound_time
+        useful_time = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        bound = max(terms.values())
+        self.roofline_fraction = useful_time / bound if bound > 0 else 0.0
+        return self
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(
+    kind: str, n_params: int, n_active_params: int, tokens: int
+) -> float:
+    """6ND train / 2ND forward-only, with N = active params for MoE."""
+    n = n_active_params or n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def derive(
+    *,
+    arch: str,
+    shape: str,
+    mesh: str,
+    chips: int,
+    cost: Dict,
+    coll: Dict,
+    kind: str,
+    n_params: int,
+    n_active_params: int,
+    tokens: int,
+) -> RooflineTerms:
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        chips=chips,
+        flops_per_chip=float(cost.get("flops", 0.0)),
+        hbm_bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_chip=float(coll.get("total", 0)),
+        model_flops_total=model_flops(kind, n_params, n_active_params, tokens),
+    ).finalize()

@@ -1,0 +1,106 @@
+"""Training launcher: end-to-end driver over the (data, model) mesh.
+
+On real hardware this runs the production configs; on this CPU container it
+drives the reduced SMOKE configs (``--smoke``) — same code path, same
+sharding rules, same checkpoint/restart machinery.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import batch_spec, opt_state_specs, param_specs
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import init_params, make_train_step
+from repro.train import CheckpointManager, adamw, cosine_lr
+
+
+def synthetic_batch(rng, cfg, batch, seq):
+    shape = (batch, seq)
+    if cfg.num_codebooks > 1:
+        shape = shape + (cfg.num_codebooks,)
+    tokens = rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1).astype(np.int32)
+    return {"tokens": tokens, "labels": labels}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = (
+        make_production_mesh() if args.production_mesh
+        else make_host_mesh(args.model_parallel)
+    )
+    opt = adamw(lr=cosine_lr(args.lr, warmup=10, total=args.steps))
+    step = make_train_step(cfg, opt)
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = opt.init(params)
+    pspecs = param_specs(params, cfg, mesh)
+    ospecs = opt_state_specs(opt_state, pspecs)
+    ns = lambda t: jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), t)
+    bshard = {
+        "tokens": NamedSharding(mesh, batch_spec(mesh, (args.batch, args.seq) + ((cfg.num_codebooks,) if cfg.num_codebooks > 1 else ()))),
+        "labels": NamedSharding(mesh, batch_spec(mesh, (args.batch, args.seq) + ((cfg.num_codebooks,) if cfg.num_codebooks > 1 else ()))),
+    }
+    jitted = jax.jit(
+        step,
+        in_shardings=(ns(pspecs), ns(ospecs), bshard),
+        out_shardings=(ns(pspecs), ns(ospecs), NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+
+    manager = (
+        CheckpointManager(args.ckpt_dir, keep=3, async_save=True)
+        if args.ckpt_dir else None
+    )
+    start = 0
+    if manager and args.resume:
+        (params, opt_state), start, _ = manager.restore_latest((params, opt_state))
+        print(f"resumed from step {start}")
+
+    params = jax.device_put(params, ns(pspecs))
+    opt_state = jax.device_put(opt_state, ns(ospecs))
+    rng = np.random.default_rng(args.seed + 1)
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        batch = synthetic_batch(rng, cfg, args.batch, args.seq)
+        params, opt_state, metrics = jitted(params, opt_state, batch)
+        if (i + 1) % 10 == 0 or i == start:
+            loss = float(metrics["loss"])
+            dt = (time.perf_counter() - t0) / max(i + 1 - start, 1)
+            print(f"step {i+1:5d}  loss {loss:.4f}  {dt*1e3:.0f} ms/step", flush=True)
+        if manager and (i + 1) % args.ckpt_every == 0:
+            manager.save(i + 1, (params, opt_state))
+    if manager:
+        manager.save(args.steps, (params, opt_state))
+        manager.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

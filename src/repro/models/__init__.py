@@ -1,0 +1,28 @@
+"""LM substrate: composable decoder stacks covering every assigned
+architecture family (dense GQA, local:global, Mamba1/Mamba2 SSM, fine-grained
+MoE, hybrid shared-attention, VLM/audio token backbones)."""
+from repro.models.model import (
+    forward,
+    init_params,
+    init_params_shapes,
+    param_count,
+)
+from repro.models.steps import (
+    decode_step,
+    init_decode_state,
+    loss_fn,
+    make_train_step,
+    prefill_step,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "init_params_shapes",
+    "loss_fn",
+    "make_train_step",
+    "param_count",
+    "prefill_step",
+]

@@ -1,0 +1,226 @@
+"""GQA attention: chunked (flash-style online-softmax) training/prefill path,
+sliding-window (local) masking for local:global stacks, and a single-token
+decode path against a KV cache.
+
+The chunked path scans over KV chunks with a running (max, sum, acc)
+accumulator, so peak memory is O(S * chunk) per head instead of O(S^2) —
+required for prefill_32k and helpful for train_4k under remat.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, apply_rope
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+def init_attention(
+    key, d_model: int, num_heads: int, num_kv_heads: int, head_dim: int, dtype
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(kq, (d_model, num_heads * head_dim), dtype),
+        "wk": _dense_init(kk, (d_model, num_kv_heads * head_dim), dtype),
+        "wv": _dense_init(kv, (d_model, num_kv_heads * head_dim), dtype),
+        "wo": _dense_init(ko, (num_heads * head_dim, d_model), dtype),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _chunked_attn(
+    q: jnp.ndarray,            # [B, S, H, hd] (rope applied)
+    k: jnp.ndarray,            # [B, S, KV, hd]
+    v: jnp.ndarray,            # [B, S, KV, hd]
+    *,
+    chunk: int,
+    window: Optional[int],     # None = full causal; else sliding window
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    nck = S // chunk
+    kc = k.reshape(B, nck, chunk, KV, hd)
+    vc = v.reshape(B, nck, chunk, KV, hd)
+    q32 = q.astype(jnp.float32)
+    qpos = jnp.arange(S)
+
+    def kv_step(carry, ck):
+        m, l, acc = carry
+        k_blk, v_blk, cidx = ck
+        kpos = cidx * chunk + jnp.arange(chunk)
+        # scores: [B, H, S, chunk]; GQA via reshape of H into (KV, rep)
+        kb = jnp.repeat(k_blk.astype(jnp.float32), rep, axis=2)  # [B,chunk,H,hd]
+        vb = jnp.repeat(v_blk.astype(jnp.float32), rep, axis=2)
+        s_blk = jnp.einsum("bqhd,bkhd->bhqk", q32, kb) * scale
+        mask = kpos[None, :] <= qpos[:, None]                   # causal
+        if window is not None:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        s_blk = jnp.where(mask[None, None], s_blk, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+        p = jnp.exp(s_blk - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H, S), dtype=jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step,
+        (m0, l0, a0),
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            jnp.arange(nck),
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # [B, H, S, hd]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)        # [B, S, H, hd]
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,            # [B, S, D]
+    positions: jnp.ndarray,    # [B, S]
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Training / prefill attention (causal, optional sliding window)."""
+    B, S, _ = x.shape
+    q = _split_heads(x @ p["wq"], num_heads, head_dim)
+    k = _split_heads(x @ p["wk"], num_kv_heads, head_dim)
+    v = _split_heads(x @ p["wv"], num_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    out = _chunked_attn(q, k, v, chunk=chunk, window=window)
+    return out.reshape(B, S, num_heads * head_dim) @ p["wo"]
+
+
+def attention_with_kv(
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+    chunk: int = 512,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Prefill: same as ``attention`` but also returns (k, v) for the cache."""
+    B, S, _ = x.shape
+    q = _split_heads(x @ p["wq"], num_heads, head_dim)
+    k = _split_heads(x @ p["wk"], num_kv_heads, head_dim)
+    v = _split_heads(x @ p["wv"], num_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    chunk = min(chunk, S)
+    out = _chunked_attn(q, k, v, chunk=chunk, window=window)
+    return out.reshape(B, S, num_heads * head_dim) @ p["wo"], (k, v)
+
+
+def decode_attention(
+    p: Params,
+    x: jnp.ndarray,            # [B, 1, D] current token activations
+    pos: jnp.ndarray,          # [B] current position (cache length so far)
+    k_cache: jnp.ndarray,      # [B, S_max, KV, hd]
+    v_cache: jnp.ndarray,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token decode against a KV cache; returns output + updated cache."""
+    B, _, _ = x.shape
+    S_max = k_cache.shape[1]
+    rep = num_heads // num_kv_heads
+    q = _split_heads(x @ p["wq"], num_heads, head_dim)          # [B,1,H,hd]
+    k = _split_heads(x @ p["wk"], num_kv_heads, head_dim)       # [B,1,KV,hd]
+    v = _split_heads(x @ p["wv"], num_kv_heads, head_dim)
+    q = apply_rope(q, pos[:, None], rope_theta)
+    k = apply_rope(k, pos[:, None], rope_theta)
+    # scatter the new kv at each row's position
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, pos].set(k[:, 0])
+    v_cache = v_cache.at[bidx, pos].set(v[:, 0])
+    kpos = jnp.arange(S_max)
+    mask = kpos[None, :] <= pos[:, None]                        # [B, S]
+    if window is not None:
+        mask &= kpos[None, :] > (pos[:, None] - window)
+    kk = jnp.repeat(k_cache.astype(jnp.float32), rep, axis=2)   # [B,S,H,hd]
+    vv = jnp.repeat(v_cache.astype(jnp.float32), rep, axis=2)
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk) * scale
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vv).astype(x.dtype)  # [B,1,H,hd]
+    out = out.reshape(B, 1, num_heads * head_dim) @ p["wo"]
+    return out, (k_cache, v_cache)
+
+
+def decode_attention_ring(
+    p: Params,
+    x: jnp.ndarray,            # [B, 1, D]
+    pos: jnp.ndarray,          # [B]
+    k_cache: jnp.ndarray,      # [B, W, KV, hd] ring buffer (W = window)
+    v_cache: jnp.ndarray,
+    slot_pos: jnp.ndarray,     # [B, W] true position per slot (-1 = empty)
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]:
+    """Sliding-window decode against a ring-buffer cache of size W.
+
+    Local layers never attend beyond their window, so the cache needs only W
+    slots instead of S_max — at long_500k this removes (S_max - W)/S_max of
+    the local layers' cache bytes (EXPERIMENTS.md §Perf, iteration G1)."""
+    B = x.shape[0]
+    W = k_cache.shape[1]
+    rep = num_heads // num_kv_heads
+    q = _split_heads(x @ p["wq"], num_heads, head_dim)
+    k = _split_heads(x @ p["wk"], num_kv_heads, head_dim)
+    v = _split_heads(x @ p["wv"], num_kv_heads, head_dim)
+    q = apply_rope(q, pos[:, None], rope_theta)
+    k = apply_rope(k, pos[:, None], rope_theta)   # rope at true position
+    bidx = jnp.arange(B)
+    slot = pos % W
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+    slot_pos = slot_pos.at[bidx, slot].set(pos)
+    mask = (
+        (slot_pos >= 0)
+        & (slot_pos <= pos[:, None])
+        & (slot_pos > pos[:, None] - W)
+    )                                              # [B, W]
+    kk = jnp.repeat(k_cache.astype(jnp.float32), rep, axis=2)
+    vv = jnp.repeat(v_cache.astype(jnp.float32), rep, axis=2)
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk) * scale
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vv).astype(x.dtype)
+    out = out.reshape(B, 1, num_heads * head_dim) @ p["wo"]
+    return out, (k_cache, v_cache, slot_pos)

@@ -1,0 +1,70 @@
+"""Decode-state containers: KV caches and SSM recurrent states, stacked to
+match each family's scan structure so decode remains a single ``lax.scan``.
+
+Shapes (S_max = cache length):
+  flat attention stacks      kv: [L, B, S_max, KV, hd] x2
+  local:global superblocks   kv: [G, P, B, S_max, KV, hd] x2
+  hybrid (zamba2)            ssm states stacked [G, P-1, ...] + kv [G, ...]
+  pure SSM                   ssm states stacked [L, ...]
+
+Note on local (sliding-window) layers: the baseline allocates the full
+S_max cache for every layer. A ring-buffer cache of size ``window`` for the
+local layers is implemented as the ``ring_local`` optimization (see
+EXPERIMENTS.md §Perf — it removes ~5/6 of gemma3's long-context cache).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _kv_pair(shape, dtype):
+    return {
+        "k": jnp.zeros(shape, dtype=dtype),
+        "v": jnp.zeros(shape, dtype=dtype),
+    }
+
+
+def _ssm_state(cfg: ModelConfig, batch: int, lead: tuple):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    if cfg.ssm_kind == "mamba1":
+        conv_c = d_inner
+        h_shape = lead + (batch, d_inner, cfg.ssm_state)
+    else:
+        conv_c = d_inner + 2 * cfg.ssm_state
+        nh = d_inner // cfg.ssm_head_dim
+        h_shape = lead + (batch, nh, cfg.ssm_head_dim, cfg.ssm_state)
+    return {
+        "conv": jnp.zeros(lead + (batch, cfg.ssm_conv - 1, conv_c), jnp.float32),
+        "h": jnp.zeros(h_shape, jnp.float32),
+    }
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, s_max: int, dtype, *, ring_local: bool = False
+) -> Dict:
+    """Decode state for one model. Safe under jax.eval_shape."""
+    G, P = cfg.layer_groups()
+    kv_shape = (batch, s_max, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.family == "ssm":
+        return {"ssm": _ssm_state(cfg, batch, (cfg.num_layers,))}
+    if cfg.is_hybrid:
+        return {
+            "ssm": _ssm_state(cfg, batch, (G, P - 1)),
+            "kv": _kv_pair((G,) + kv_shape, dtype),
+        }
+    if cfg.attn_pattern == "local_global":
+        if ring_local:
+            # P-1 local layers use a ring buffer of the window size; the
+            # single global layer keeps the full cache.
+            w = min(cfg.window_size, s_max)
+            local = _kv_pair(
+                (G, P - 1, batch, w, cfg.num_kv_heads, cfg.head_dim), dtype
+            )
+            local["pos"] = jnp.full((G, P - 1, batch, w), -1, jnp.int32)
+            return {"kv_local": local, "kv_global": _kv_pair((G,) + kv_shape, dtype)}
+        return {"kv": _kv_pair((G, P) + kv_shape, dtype)}
+    return {"kv": _kv_pair((cfg.num_layers,) + kv_shape, dtype)}

@@ -1,0 +1,101 @@
+"""Shared transformer layers: RMSNorm, RoPE, MLP variants, embeddings.
+
+All modules are pure functions over param dicts (no framework dependency);
+params are created by matching ``init_*`` functions so that shape/dtype can
+also be derived without allocation via ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --- RMSNorm -------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --- RoPE ----------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLP variants ---------------------------------------------------------------
+
+MLP_TYPES = ("swiglu", "squared_relu", "gelu")
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_out": _dense_init(k2, (d_ff, d_model), dtype),
+    }
+    if mlp_type == "swiglu":
+        p["w_gate"] = _dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif mlp_type == "squared_relu":  # nemotron-4
+        h = jnp.square(jax.nn.relu(h))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp_type {mlp_type}")
+    return h @ p["w_out"]
+
+
+# --- Embedding / unembedding ------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: [., D] @ [D, V] -> f32 logits."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["table"], preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,316 @@
+"""Model assembly: parameter init + forward for every architecture family.
+
+Layer stacks are *scanned* (``lax.scan`` over stacked parameter pytrees) so
+the lowered HLO stays compact at 96-layer scale, with remat applied to the
+scan body. Families with a repeating super-structure (gemma3's 5-local:1-
+global pattern, zamba2's 5-mamba:1-shared-attention pattern) scan over
+superblocks and unroll the small intra-block pattern in Python.
+
+Everything here is shape-polymorphic over ShapeDtypeStructs: the dry-run
+initializes parameters with ``jax.eval_shape`` (no allocation) and lowers
+against ``input_specs`` stand-ins.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+    _dense_init,
+)
+
+Params = Dict
+
+
+# --- init ------------------------------------------------------------------------
+
+
+def _init_attn_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_lib.init_attention(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, dtype
+        ),
+        "mlp_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.init_moe(
+            k2, cfg.d_model, cfg.num_experts, cfg.num_shared_experts,
+            cfg.d_ff_expert, cfg.mlp_type, dtype,
+        )
+    else:
+        p["mlp"] = init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def _init_ssm_block(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.ssm_kind == "mamba1":
+        m = ssm_lib.init_mamba1(
+            key, cfg.d_model, cfg.ssm_state, cfg.ssm_conv, cfg.ssm_expand, dtype
+        )
+    else:
+        m = ssm_lib.init_mamba2(
+            key, cfg.d_model, cfg.ssm_state, cfg.ssm_conv, cfg.ssm_expand,
+            cfg.ssm_head_dim, dtype,
+        )
+    return {"norm": init_rmsnorm(cfg.d_model, dtype), "mamba": m}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = dtype_of(cfg)
+    k_embed, k_layers, k_shared, k_heads = jax.random.split(key, 4)
+    params: Params = {"final_norm": init_rmsnorm(cfg.d_model, dtype)}
+
+    if cfg.num_codebooks > 1:  # musicgen: per-codebook tables + untied heads
+        tabs = jax.vmap(
+            lambda k: init_embedding(k, cfg.vocab_size, cfg.d_model, dtype)["table"]
+        )(jax.random.split(k_embed, cfg.num_codebooks))
+        params["embed"] = {"table": tabs}
+        params["heads"] = jax.vmap(
+            lambda k: _dense_init(k, (cfg.d_model, cfg.vocab_size), dtype)
+        )(jax.random.split(k_heads, cfg.num_codebooks))
+    else:
+        params["embed"] = init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dtype)
+
+    G, P = cfg.layer_groups()
+    if cfg.family == "ssm":
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(lambda k: _init_ssm_block(k, cfg, dtype))(keys)
+    elif cfg.is_hybrid:
+        keys = jax.random.split(k_layers, G * (P - 1)).reshape(G, P - 1, 2)
+        params["layers"] = jax.vmap(
+            jax.vmap(lambda k: _init_ssm_block(k, cfg, dtype))
+        )(keys)
+        params["shared_attn"] = _init_attn_block(k_shared, cfg, dtype)
+    elif cfg.attn_pattern == "local_global":
+        keys = jax.random.split(k_layers, G * P).reshape(G, P, 2)
+        params["layers"] = jax.vmap(
+            jax.vmap(lambda k: _init_attn_block(k, cfg, dtype))
+        )(keys)
+    else:  # dense / moe / vlm / audio: flat scan over layers
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(lambda k: _init_attn_block(k, cfg, dtype))(keys)
+    return params
+
+
+def init_params_shapes(cfg: ModelConfig, key=None) -> Params:
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_params, cfg), key)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(jnp.size(x)) if hasattr(x, "size") else 0
+               for x in jax.tree_util.tree_leaves(params))
+
+
+# --- blocks ------------------------------------------------------------------------
+
+
+def _attn_block(
+    cfg: ModelConfig, p: Params, x, positions, window: Optional[int]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = attn_lib.attention(
+        p["attn"], rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        window=window, chunk=cfg.attn_chunk,
+    )
+    x = x + h
+    y = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.is_moe and "moe" in p:
+        out, aux = moe_lib.moe(
+            p["moe"], y, num_experts=cfg.num_experts, top_k=cfg.top_k,
+            mlp_type=cfg.mlp_type, capacity_factor=cfg.capacity_factor,
+            group=cfg.moe_group,
+        )
+    else:
+        out, aux = mlp(p["mlp"], y, cfg.mlp_type), jnp.float32(0.0)
+    return x + out, aux
+
+
+def _ssm_block(cfg: ModelConfig, p: Params, x) -> jnp.ndarray:
+    y = rmsnorm(p["norm"], x, cfg.norm_eps)
+    if cfg.ssm_kind == "mamba1":
+        h = ssm_lib.mamba1(
+            p["mamba"], y, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+            chunk=cfg.ssm_chunk,
+        )
+    elif cfg.ssm_impl == "ssd":
+        h = ssm_lib.mamba2_ssd(
+            p["mamba"], y, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+            head_dim=cfg.ssm_head_dim, chunk=min(cfg.ssm_chunk, 64),
+        )
+    else:
+        h = ssm_lib.mamba2(
+            p["mamba"], y, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+            head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+        )
+    return x + h
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+_GATHER_RULES = {
+    # leaf name -> use-time spec for the trailing dims (fsdp axis removed;
+    # the "model" placement matches distributed.sharding's storage rules)
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    "w_in": (None, "model"), "w_gate": (None, "model"), "w_out": ("model", None),
+    "router": (None, None),
+    "e_in": ("model", None, None), "e_gate": ("model", None, None),
+    "e_out": ("model", None, None),
+    "s_in": (None, "model"), "s_gate": (None, "model"), "s_out": ("model", None),
+    "in_proj": (None, "model"), "x_proj": ("model", None),
+    "dt_proj": (None, "model"), "out_proj": ("model", None),
+    "conv_w": (None, "model"), "conv_b": ("model",),
+    "table": ("model", None), "heads": (None, None, "model"),
+}
+
+
+def _gather_weights(tree, cfg: ModelConfig):
+    """Explicit ZeRO-3: constrain each weight slice to its FSDP-axis-free
+    spec at use, so XLA all-gathers the (small) weight shard instead of
+    all-reducing a (huge) partial-sum activation. Found via the dry-run
+    collective profile — see EXPERIMENTS.md section Perf, iteration N1."""
+    if not cfg.gather_weights:
+        return tree
+    from jax.sharding import PartitionSpec as _PS
+
+    def leaf(path, x):
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        rule = _GATHER_RULES.get(name or "")
+        if rule is None or x.ndim < len(rule):
+            return x
+        pad = (None,) * (x.ndim - len(rule))
+        return jax.lax.with_sharding_constraint(x, _PS(*(pad + rule)))
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def _scan_layers(body, carry, xs, unroll: bool):
+    """lax.scan, or a python-unrolled equivalent (dry-run cost probes —
+    HLO cost analysis counts a scan body once, so probes unroll)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree_util.tree_map(lambda a, i=i: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# --- forward ------------------------------------------------------------------------
+
+
+def _embed_tokens(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    params = {"embed": _gather_weights(params["embed"], cfg), **{
+        k: v for k, v in params.items() if k != "embed"}}
+    if cfg.num_codebooks > 1:
+        tab = params["embed"]["table"]           # [K, V, D]
+        parts = [jnp.take(tab[k], tokens[..., k], axis=0)
+                 for k in range(cfg.num_codebooks)]
+        return sum(parts)
+    return embed(params["embed"], tokens)
+
+
+def _logits(params: Params, cfg: ModelConfig, x) -> jnp.ndarray:
+    if cfg.num_codebooks > 1:
+        heads = _gather_weights({"heads": params["heads"]}, cfg)["heads"]
+        return jnp.einsum(
+            "bsd,kdv->bskv", x, heads, preferred_element_type=jnp.float32
+        )
+    return unembed(_gather_weights(params["embed"], cfg), x)
+
+
+def forward(
+    params: Params, cfg: ModelConfig, tokens, positions=None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits f32, moe aux-loss scalar)."""
+    B, S = tokens.shape[0], tokens.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed_tokens(params, cfg, tokens)
+    G, P = cfg.layer_groups()
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            lp = _gather_weights(lp, cfg)
+            return _ssm_block(cfg, lp, carry), None
+        body = _maybe_remat(body, cfg)
+        x, _ = _scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        aux = jnp.float32(0.0)
+    elif cfg.is_hybrid:
+        shared = _gather_weights(params["shared_attn"], cfg)
+
+        def body(carry, lp):
+            lp = _gather_weights(lp, cfg)
+            h = carry
+            for i in range(P - 1):
+                sub = jax.tree_util.tree_map(lambda a, i=i: a[i], lp)
+                h = _ssm_block(cfg, sub, h)
+            h, _ = _attn_block(cfg, shared, h, positions, None)
+            return h, None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = _scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        aux = jnp.float32(0.0)
+    elif cfg.attn_pattern == "local_global":
+        def body(carry, lp):
+            lp = _gather_weights(lp, cfg)
+            h = carry
+            for i in range(P):
+                sub = jax.tree_util.tree_map(lambda a, i=i: a[i], lp)
+                window = cfg.window_size if i < P - 1 else None
+                h, _ = _attn_block(cfg, sub, h, positions, window)
+            return h, None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = _scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        aux = jnp.float32(0.0)
+    else:
+        def body(carry, lp):
+            lp = _gather_weights(lp, cfg)
+            h, aux = carry
+            h, a = _attn_block(cfg, lp, h, positions, None)
+            return (h, aux + a), None
+
+        body = _maybe_remat(body, cfg)
+        (x, aux), _ = _scan_layers(body, (x, jnp.float32(0.0)), params["layers"], cfg.unroll_layers)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), aux

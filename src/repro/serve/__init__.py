@@ -1,0 +1,17 @@
+"""Distributed UDG serving: shard-per-device search + hierarchical merge,
+request batching, and straggler mitigation."""
+from repro.serve.distributed import (
+    ShardedIndex,
+    build_sharded_index,
+    make_serving_step,
+    serve_batch,
+)
+from repro.serve.batching import RequestBatcher
+
+__all__ = [
+    "RequestBatcher",
+    "ShardedIndex",
+    "build_sharded_index",
+    "make_serving_step",
+    "serve_batch",
+]

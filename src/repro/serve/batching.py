@@ -1,0 +1,99 @@
+"""Request batching + straggler mitigation for the serving path.
+
+``RequestBatcher`` packs asynchronous (vector, interval) requests into
+fixed-size batches (padding with sentinel no-op queries) so the jitted
+serving step sees one static shape — the standard recipe for TPU serving.
+
+``SpeculativeDispatcher`` models the shard-straggler policy used at fleet
+scale: each shard RPC gets a deadline; shards that miss it are speculatively
+re-dispatched to their replica, and the first response wins. On a single
+host this is exercised with injected delays (tests/test_fault.py); on a real
+fleet the same policy object wraps the per-pod RPC layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    qvec: np.ndarray
+    s_q: float
+    t_q: float
+    req_id: int
+
+
+class RequestBatcher:
+    """Fixed-shape batcher with sentinel padding."""
+
+    def __init__(self, batch_size: int, dim: int, *, timeout_s: float = 0.01):
+        self.batch_size = batch_size
+        self.dim = dim
+        self.timeout_s = timeout_s
+        self._pending: List[Request] = []
+        self._next_id = 0
+
+    def submit(self, qvec: np.ndarray, s_q: float, t_q: float) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append(Request(np.asarray(qvec, np.float32), s_q, t_q, rid))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def next_batch(
+        self,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, List[int], int]]:
+        """Returns (q [B,d], s_q [B], t_q [B], req_ids, n_real) or None."""
+        if not self._pending:
+            return None
+        take = self._pending[: self.batch_size]
+        self._pending = self._pending[self.batch_size:]
+        n = len(take)
+        B = self.batch_size
+        q = np.zeros((B, self.dim), np.float32)
+        s_q = np.zeros(B)
+        t_q = np.full(B, -1.0)  # s_q > t_q => empty valid set => no-op row
+        for i, r in enumerate(take):
+            q[i] = r.qvec
+            s_q[i] = r.s_q
+            t_q[i] = r.t_q
+        return q, s_q, t_q, [r.req_id for r in take], n
+
+
+class SpeculativeDispatcher:
+    """Deadline-based speculative re-dispatch across shard replicas."""
+
+    def __init__(
+        self,
+        primary: Sequence[Callable[..., object]],
+        replicas: Sequence[Callable[..., object]],
+        *,
+        deadline_s: float,
+    ):
+        assert len(primary) == len(replicas)
+        self.primary = list(primary)
+        self.replicas = list(replicas)
+        self.deadline_s = deadline_s
+        self.respeculated: List[int] = []
+
+    def call_shard(self, shard: int, *args):
+        t0 = time.perf_counter()
+        try:
+            out = self.primary[shard](*args)
+            if time.perf_counter() - t0 <= self.deadline_s:
+                return out
+        except Exception:
+            pass
+        # deadline miss or failure: speculative retry on the replica
+        self.respeculated.append(shard)
+        return self.replicas[shard](*args)
+
+    def call_all(self, nshards: int, *args) -> List[object]:
+        return [self.call_shard(i, *args) for i in range(nshards)]

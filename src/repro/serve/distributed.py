@@ -1,0 +1,232 @@
+"""Distributed UDG serving over a (data, model[, pod]) mesh.
+
+Layout (classic shard-per-device vector search, DESIGN.md §3):
+  * the database is partitioned into ``num_shards`` blocks along the
+    ``model`` axis; each shard builds its OWN UDG over its block (top-k over
+    a union is the merge of per-shard top-k, so per-shard indexes are exact
+    w.r.t. the union);
+  * shard-local arrays (graph, canonical grids, entry tables) are stacked on
+    a leading shard dim and shard_map'ed with P("model");
+  * queries are sharded over ("pod","data") and replicated over "model";
+  * canonicalization (Lemma 1) runs per shard on shard-local U_X/U_Y;
+  * per-shard top-k results are merged across "model" — baseline via
+    all_gather + top_k; optimized via a log2(shards)-step collective-permute
+    tournament that moves k instead of shards*k entries per hop
+    (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.build import build_udg
+from repro.core.entry import EntryTable
+from repro.core.predicates import get_relation
+from repro.search.batched import _batched_search_core
+from repro.search.device_graph import export_device_graph
+
+
+@dataclasses.dataclass
+class ShardedIndex:
+    """Per-shard UDG arrays stacked on a leading shard dimension."""
+
+    vectors: np.ndarray       # [shards, n_l, d]
+    nbr: np.ndarray           # [shards, n_l, E]
+    labels: np.ndarray        # [shards, n_l, E, 4]
+    U_X: np.ndarray           # [shards, ux_max] f32, +inf padded
+    U_Y: np.ndarray           # [shards, uy_max] f32, -inf padded (prefix real)
+    num_y: np.ndarray         # [shards] int32 actual |U_Y| per shard
+    entry_node: np.ndarray    # [shards, ux_max] int32
+    entry_y_rank: np.ndarray  # [shards, ux_max] int32
+    relation: str
+    n_local: int
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.vectors.shape[0])
+
+
+def build_sharded_index(
+    vectors: np.ndarray,
+    s: np.ndarray,
+    t: np.ndarray,
+    relation: str,
+    num_shards: int,
+    *,
+    M: int = 16,
+    Z: int = 128,
+    K_p: int = 8,
+) -> ShardedIndex:
+    """Partition the database round-robin and build one UDG per shard."""
+    n = vectors.shape[0]
+    assert n % num_shards == 0, (n, num_shards)
+    n_l = n // num_shards
+    parts = [np.arange(sh, n, num_shards) for sh in range(num_shards)]
+    dgs = []
+    for ids in parts:
+        g, _ = build_udg(vectors[ids], s[ids], t[ids], relation, M=M, Z=Z, K_p=K_p)
+        dgs.append(export_device_graph(g, EntryTable(g)))
+    E = max(dg.max_degree for dg in dgs)
+    ux = max(dg.U_X.shape[0] for dg in dgs)
+    uy = max(dg.U_Y.shape[0] for dg in dgs)
+
+    def padE(a, e, fill):
+        out = np.full(a.shape[:1] + (e,) + a.shape[2:], fill, dtype=a.dtype)
+        out[:, : a.shape[1]] = a
+        return out
+
+    vec = np.stack([dg.vectors for dg in dgs])
+    nbr = np.stack([padE(dg.nbr, E, -1) for dg in dgs])
+    lab = np.stack([padE(dg.labels, E, 0) for dg in dgs])
+    UX = np.full((num_shards, ux), np.inf, np.float32)
+    UY = np.full((num_shards, uy), -np.inf, np.float32)
+    ent = np.full((num_shards, ux), -1, np.int32)
+    enty = np.full((num_shards, ux), np.iinfo(np.int32).max, np.int32)
+    num_y = np.zeros(num_shards, np.int32)
+    for i, dg in enumerate(dgs):
+        kx = dg.U_X.shape[0]
+        UX[i, :kx] = dg.U_X.astype(np.float32)
+        UY[i, : dg.U_Y.shape[0]] = dg.U_Y.astype(np.float32)
+        num_y[i] = dg.U_Y.shape[0]
+        ent[i, :kx] = dg.entry_node
+        enty[i, :kx] = dg.entry_y_rank
+    return ShardedIndex(
+        vectors=vec, nbr=nbr, labels=lab, U_X=UX, U_Y=UY, num_y=num_y,
+        entry_node=ent, entry_y_rank=enty, relation=relation, n_local=n_l,
+    )
+
+
+def _canonicalize_local(UX, UY, num_y, ent, enty, xq, yq):
+    """Device-side Lemma 1 snap onto shard-local canonical grids."""
+    a = jnp.searchsorted(UX, xq, side="left").astype(jnp.int32)
+    c = (jnp.searchsorted(UY, yq, side="right") - 1).astype(jnp.int32)
+    num_x = UX.shape[0]
+    invalid = (a >= num_x) | (c < 0) | (c >= num_y)
+    a_cl = jnp.clip(a, 0, num_x - 1)
+    ep = ent[a_cl]
+    ep = jnp.where(invalid | (ep < 0) | (enty[a_cl] > c), -1, ep)
+    return jnp.stack([a_cl, jnp.maximum(c, 0)], axis=1), ep
+
+
+def make_serving_step(
+    mesh,
+    relation: str,
+    *,
+    k: int = 10,
+    beam: int = 64,
+    max_iters: int | None = None,
+    merge: str = "all_gather",     # all_gather | tournament
+    use_ref_kernel: bool = True,
+    unroll_iters: int = 0,
+    int8_vectors: bool = False,
+):
+    """Build the jitted shard_map serving step for ``mesh``.
+
+    Signature of the returned fn:
+      (vectors, nbr, labels, U_X, U_Y, num_y, entry_node, entry_y_rank,
+       q, xq, yq[, scales]) -> (global_ids [B, k], dists [B, k])
+    with the database arrays carrying the leading shard dim. With
+    ``int8_vectors`` the database is int8 + per-vector f32 scales (4x less
+    HBM traffic on beam-expansion gathers — EXPERIMENTS.md §Perf U3).
+    """
+    max_iters = max_iters if max_iters is not None else 2 * beam
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def shard_fn(vec, nbr, lab, UX, UY, num_y, ent, enty, q, xq, yq,
+                 scales=None):
+        # leading shard dim is 1 on-device
+        vec, nbr, lab = vec[0], nbr[0], lab[0]
+        UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
+        states, ep = _canonicalize_local(UX, UY, num_y[0], ent, enty, xq, yq)
+        ids_l, d_l = _batched_search_core(
+            vec, nbr, lab, q, states, ep,
+            k=k, beam=beam, max_iters=max_iters, use_ref=use_ref_kernel,
+            unroll_iters=unroll_iters,
+            scales=scales[0] if scales is not None else None,
+        )
+        shard_id = jax.lax.axis_index("model")
+        n_l = vec.shape[0]
+        gids = jnp.where(ids_l >= 0, ids_l * 1 + shard_id * n_l, -1)
+        d_l = jnp.where(ids_l >= 0, d_l, jnp.inf)
+        if merge == "tournament":
+            # log-step pairwise merge: each hop exchanges only k entries
+            num_shards = mesh.shape["model"]
+            step = 1
+            while step < num_shards:
+                perm = [
+                    (i, i ^ step) for i in range(num_shards)
+                ]
+                o_ids = jax.lax.ppermute(gids, "model", perm)
+                o_d = jax.lax.ppermute(d_l, "model", perm)
+                cat_d = jnp.concatenate([d_l, o_d], axis=1)
+                cat_i = jnp.concatenate([gids, o_ids], axis=1)
+                nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+                d_l, gids = nd[:, :k], ni[:, :k]
+                step *= 2
+        else:
+            all_i = jax.lax.all_gather(gids, "model", axis=1)   # [B, S, k]
+            all_d = jax.lax.all_gather(d_l, "model", axis=1)
+            B = all_i.shape[0]
+            cat_d = all_d.reshape(B, -1)
+            cat_i = all_i.reshape(B, -1)
+            nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+            d_l, gids = nd[:, :k], ni[:, :k]
+        return gids, d_l
+
+    shard_spec = P("model")
+    qspec = P(batch_axes)
+    in_specs = (
+        shard_spec, shard_spec, shard_spec, shard_spec, shard_spec,
+        shard_spec, shard_spec, shard_spec, qspec, qspec, qspec,
+    )
+    if int8_vectors:
+        in_specs = in_specs + (shard_spec,)
+    fn = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(qspec, qspec),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def serve_batch(
+    idx: ShardedIndex,
+    mesh,
+    q: np.ndarray,
+    s_q: np.ndarray,
+    t_q: np.ndarray,
+    *,
+    k: int = 10,
+    beam: int = 64,
+    merge: str = "all_gather",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host entry point: run one distributed batch end-to-end.
+
+    Returned ids are ROUND-ROBIN global: original_id = local_id*shards+shard
+    is inverted here so callers see dataset ids."""
+    rel = get_relation(idx.relation)
+    xq, yq = rel.query_map(
+        np.asarray(s_q, np.float64), np.asarray(t_q, np.float64)
+    )
+    step = make_serving_step(mesh, idx.relation, k=k, beam=beam, merge=merge)
+    gids, d = step(
+        idx.vectors, idx.nbr, idx.labels, idx.U_X, idx.U_Y, idx.num_y,
+        idx.entry_node, idx.entry_y_rank,
+        np.asarray(q, np.float32),
+        np.asarray(xq, np.float32),
+        np.asarray(yq, np.float32),
+    )
+    gids = np.asarray(gids)
+    d = np.asarray(d)
+    shard = gids // idx.n_local
+    local = gids % idx.n_local
+    orig = np.where(gids >= 0, local * idx.num_shards + shard, -1)
+    return orig, d

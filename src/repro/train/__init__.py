@@ -1,0 +1,16 @@
+"""Training substrate: sharded AdamW, checkpointing, elastic restart,
+gradient compression."""
+from repro.train.optimizer import adamw, cosine_lr
+from repro.train.checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "adamw",
+    "cosine_lr",
+    "load_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,75 @@
+"""Explicit data-parallel trainer (shard_map) with optional int8 gradient
+compression.
+
+The default production path is the pjit/GSPMD trainer (launch/train.py +
+distributed/sharding.py) where XLA derives the collectives. This module is
+the *explicit-collective* variant used when the communication schedule
+itself is the experiment: per-replica grads are computed locally, then
+all-reduced either in f32 (`psum`) or through the int8 error-feedback path
+(`repro.distributed.compression`) — an 8x ICI traffic cut, which matters
+when the collective term dominates the roofline (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import compressed_psum, init_residual
+from repro.models.steps import loss_fn
+
+
+def make_dp_train_step(
+    cfg: ModelConfig, optimizer, mesh, *, compress_grads: bool = False
+):
+    """Returns (init_state, step) for pure-DP training over axis 'data'.
+
+    state = {params, opt, residual}; batch sharded on axis 0.
+    """
+
+    def local_grads(params, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch["tokens"], batch["labels"]
+        )
+        return grads, total, metrics
+
+    def step_fn(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        grads, total, metrics = local_grads(params, batch)
+        if compress_grads:
+            grads, residual = compressed_psum(grads, state["residual"], "data")
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, "data"), grads
+            )
+            residual = state["residual"]
+        new_params, new_opt, gnorm = optimizer.update(grads, state["opt"], params)
+        out = {"params": new_params, "opt": new_opt, "residual": residual}
+        metrics = {
+            "loss": jax.lax.pmean(metrics["loss"], "data"),
+            "total": jax.lax.pmean(total, "data"),
+            "grad_norm": gnorm,
+        }
+        return out, metrics
+
+    sm = jax.shard_map(
+        step_fn,
+        mesh=mesh,
+        in_specs=(P(), {"tokens": P("data"), "labels": P("data")}),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    jitted = jax.jit(sm, donate_argnums=(0,))
+
+    def init_state(params):
+        return {
+            "params": params,
+            "opt": optimizer.init(params),
+            "residual": init_residual(params),
+        }
+
+    return init_state, jitted

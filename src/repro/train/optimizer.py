@@ -1,0 +1,94 @@
+"""AdamW with f32 master weights, built for sharded execution.
+
+Optimizer states mirror the parameter pytree, so the same PartitionSpecs
+shard them (ZeRO-style: with params FSDP-sharded over the data axis, the
+master copy and both moments are too — 14 bytes/param spread over the whole
+mesh). Update math runs in f32 regardless of the bf16 compute params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Dict
+    nu: Dict
+    master: Dict
+
+
+def cosine_lr(
+    base_lr: float, warmup: int, total: int, min_frac: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:  # noqa: N801 — factory used like a module constant
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(f32, params),
+            nu=jax.tree_util.tree_map(f32, params),
+            master=jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params
+            ),
+        )
+
+    def update(
+        self, grads, state: AdamWState, params
+    ) -> Tuple[Dict, AdamWState, jnp.ndarray]:
+        step = state.step + 1
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)
+            )
+        )
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        lr = self._lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, w):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            w_new = w - lr * (mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * w)
+            return m, v, w_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, state.master)
+        mu = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        master = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        new_params = jax.tree_util.tree_map(
+            lambda w, p: w.astype(p.dtype), master, params
+        )
+        return new_params, AdamWState(step, mu, nu, master), gnorm

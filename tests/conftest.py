@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — tests and benches
+must see the real single CPU device; only launch/dryrun.py forces 512
+placeholder devices (and multi-device tests spawn subprocesses)."""
+import numpy as np
+import pytest
+
+from repro.data import make_dataset, make_queries_vectors
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """(vectors, s, t): 1500 x 16, uniform capped intervals."""
+    return make_dataset(1500, 16, seed=0)
+
+
+@pytest.fixture(scope="session")
+def query_vectors():
+    return make_queries_vectors(24, 16, seed=1)
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    """(vectors, s, t): 120 x 8 — small enough for exhaustive state checks."""
+    return make_dataset(120, 8, seed=3)
+
+
+def pad_ids(ids, k):
+    ids = np.asarray(ids, dtype=np.int64)
+    if ids.shape[0] >= k:
+        return ids[:k]
+    return np.pad(ids, (0, k - ids.shape[0]), constant_values=-1)

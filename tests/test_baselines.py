@@ -1,0 +1,74 @@
+"""Baseline correctness: PreFilter is exact; graph baselines reach
+reasonable recall; Hi-PNG is containment-only."""
+import numpy as np
+import pytest
+
+from repro.baselines import Acorn, HiPNG, PostFilterHNSW, PreFilter
+from repro.data import generate_queries, ground_truth, make_dataset, recall_at_k
+
+from conftest import pad_ids
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset(1200, 16, seed=10)
+
+
+@pytest.fixture(scope="module")
+def queries(data, query_vectors):
+    vecs, s, t = data
+    qs = generate_queries(query_vectors, s, t, "containment", 0.05, k=10, seed=11)
+    return ground_truth(qs, vecs, s, t)
+
+
+def _run(method, qs, ef):
+    return np.stack([
+        pad_ids(method.search(qs.vectors[i], qs.s_q[i], qs.t_q[i], 10, ef)[0], 10)
+        for i in range(qs.nq)
+    ])
+
+
+def test_prefilter_exact(data, queries):
+    vecs, s, t = data
+    pf = PreFilter()
+    pf.build(vecs, s, t, "containment")
+    res = _run(pf, queries, 0)
+    assert recall_at_k(res, queries) == 1.0
+
+
+def test_postfilter_recall(data, queries):
+    vecs, s, t = data
+    po = PostFilterHNSW(M=10, ef_construction=48)
+    po.build(vecs, s, t, "containment")
+    assert recall_at_k(_run(po, queries, 64), queries) >= 0.9
+
+
+def test_acorn_recall(data, queries):
+    vecs, s, t = data
+    ac = Acorn(M=10, gamma=6, ef_construction=48)
+    ac.build(vecs, s, t, "containment")
+    assert recall_at_k(_run(ac, queries, 64), queries) >= 0.7
+
+
+def test_hipng_recall_and_containment_only(data, queries):
+    vecs, s, t = data
+    hp = HiPNG(M=10, ef_construction=32, leaf_size=128, min_graph_size=96)
+    hp.build(vecs, s, t, "containment")
+    assert recall_at_k(_run(hp, queries, 48), queries) >= 0.9
+    with pytest.raises(ValueError):
+        HiPNG().build(vecs, s, t, "overlap")
+
+
+def test_all_baselines_return_valid_only(data, queries):
+    from repro.core import get_relation
+
+    vecs, s, t = data
+    rel = get_relation("containment")
+    methods = [PreFilter(), PostFilterHNSW(M=8, ef_construction=32),
+               Acorn(M=8, gamma=4, ef_construction=32)]
+    for m in methods:
+        m.build(vecs, s, t, "containment")
+        for i in range(5):
+            ids, _ = m.search(queries.vectors[i], queries.s_q[i], queries.t_q[i], 10, 32)
+            mask = rel.valid_mask(s, t, queries.s_q[i], queries.t_q[i])
+            assert all(mask[j] for j in ids), type(m).__name__

@@ -1,0 +1,103 @@
+"""Batched jittable search: parity with the host reference + edge cases."""
+import numpy as np
+import pytest
+
+from repro.core import build_index, get_relation
+from repro.data import generate_queries, ground_truth, make_dataset, recall_at_k
+from repro.search import batched_udg_search, export_device_graph, prepare_states
+
+
+@pytest.fixture(scope="module")
+def setup(small_dataset, query_vectors):
+    vecs, s, t = small_dataset
+    g, et, _ = build_index(vecs, s, t, "overlap", M=10, Z=48, K_p=8)
+    dg = export_device_graph(g, et)
+    return vecs, s, t, g, dg
+
+
+@pytest.mark.parametrize("sigma", [0.01, 0.1])
+def test_batched_recall_and_validity(setup, query_vectors, sigma):
+    vecs, s, t, g, dg = setup
+    qs = ground_truth(
+        generate_queries(query_vectors, s, t, "overlap", sigma, k=10, seed=8),
+        vecs, s, t,
+    )
+    ids, dists = batched_udg_search(dg, qs.vectors, qs.s_q, qs.t_q,
+                                    k=10, beam=64, use_ref=True)
+    rel = get_relation("overlap")
+    for i in range(qs.nq):
+        mask = rel.valid_mask(s, t, qs.s_q[i], qs.t_q[i])
+        for j in ids[i]:
+            if j >= 0:
+                assert mask[j]
+    assert recall_at_k(ids, qs) >= 0.95
+
+
+def test_batched_with_pallas_kernel_matches_ref_path(setup, query_vectors):
+    vecs, s, t, g, dg = setup
+    qs = generate_queries(query_vectors[:6], s, t, "overlap", 0.05, k=5, seed=9)
+    a, _ = batched_udg_search(dg, qs.vectors, qs.s_q, qs.t_q, k=5, beam=32,
+                              use_ref=True)
+    b, _ = batched_udg_search(dg, qs.vectors, qs.s_q, qs.t_q, k=5, beam=32,
+                              use_ref=False)  # interpret-mode Pallas
+    np.testing.assert_array_equal(a, b)
+
+
+def test_empty_and_sentinel_queries(setup):
+    vecs, s, t, g, dg = setup
+    q = vecs[:3]
+    # sentinel row: s_q > t_q -> no valid objects -> all -1
+    s_q = np.array([s.min(), 50.0, 10.0])
+    t_q = np.array([t.max(), 40.0, -5.0])  # rows 1,2 invalid intervals
+    states, ep = prepare_states(dg, s_q, t_q)
+    assert ep[0] >= 0
+    ids, dists = batched_udg_search(dg, q, s_q, t_q, k=5, beam=16, use_ref=True)
+    assert np.all(ids[2] == -1)
+
+
+def test_prepare_states_matches_host_canonicalization(setup):
+    vecs, s, t, g, dg = setup
+    rng = np.random.default_rng(1)
+    s_q = rng.uniform(s.min(), s.max(), 50)
+    t_q = s_q + rng.uniform(0, (t - s).max() * 3, 50)
+    states, ep = prepare_states(dg, s_q, t_q)
+    for i in range(50):
+        st = g.canonical_rank_state(float(s_q[i]), float(t_q[i]))
+        if st is None:
+            assert ep[i] == -1
+        else:
+            assert tuple(states[i]) == st
+
+
+def test_device_graph_export_consistency(setup):
+    vecs, s, t, g, dg = setup
+    assert dg.nbr.shape[0] == g.n
+    for u in (0, 5, 100):
+        nbr, l, r, b, e = g.tuples(u)
+        k = nbr.shape[0]
+        np.testing.assert_array_equal(dg.nbr[u, :k], nbr)
+        assert np.all(dg.nbr[u, k:] == -1)
+        np.testing.assert_array_equal(dg.labels[u, :k, 0], l)
+        np.testing.assert_array_equal(dg.labels[u, :k, 3], e)
+
+
+def test_int8_search_path_recall(setup, query_vectors):
+    """§Perf U3: int8-quantized database vectors keep full recall."""
+    import jax.numpy as jnp
+    from repro.data import generate_queries, ground_truth, recall_at_k
+    from repro.kernels.int8dist import quantize_int8
+    from repro.search.batched import _batched_search_core
+
+    vecs, s, t, g, dg = setup
+    qs = ground_truth(
+        generate_queries(query_vectors, s, t, "overlap", 0.05, k=10, seed=33),
+        vecs, s, t,
+    )
+    states, ep = prepare_states(dg, qs.s_q, qs.t_q)
+    vq, sc = quantize_int8(jnp.asarray(dg.vectors))
+    ids, _ = _batched_search_core(
+        vq, jnp.asarray(dg.nbr), jnp.asarray(dg.labels),
+        jnp.asarray(qs.vectors), jnp.asarray(states), jnp.asarray(ep),
+        k=10, beam=64, max_iters=128, use_ref=True, scales=sc,
+    )
+    assert recall_at_k(np.asarray(ids), qs) >= 0.95

@@ -1,0 +1,74 @@
+"""Checkpointing: atomicity, verification, retention, async, resharding."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import CheckpointManager, load_checkpoint, save_checkpoint
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+                   "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))},
+        "step": jnp.asarray(7, dtype=jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    st = _state()
+    save_checkpoint(str(tmp_path), 7, st, extra={"note": "x"})
+    loaded, step, extra = load_checkpoint(str(tmp_path), st)
+    assert step == 7 and extra["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(loaded["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+
+
+def test_hash_verification_catches_corruption(tmp_path):
+    st = _state()
+    path = save_checkpoint(str(tmp_path), 1, st)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    man["hash"] = "0" * 64
+    json.dump(man, open(os.path.join(path, "manifest.json"), "w"))
+    with pytest.raises(IOError):
+        load_checkpoint(path, st)
+
+
+def test_missing_key_detected(tmp_path):
+    st = _state()
+    save_checkpoint(str(tmp_path), 1, st)
+    bigger = dict(st, extra_leaf=jnp.zeros((2,)))
+    with pytest.raises(KeyError):
+        load_checkpoint(str(tmp_path), bigger)
+
+
+def test_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _state(step))
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_0000000003", "step_0000000004"]
+    _, step, _ = mgr.restore_latest(_state())
+    assert step == 4
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(5, _state(5))
+    mgr.wait()
+    _, step, _ = mgr.restore_latest(_state())
+    assert step == 5
+
+
+def test_atomic_no_partial_on_existing(tmp_path):
+    """A second save of the same step atomically replaces the first."""
+    st = _state(1)
+    save_checkpoint(str(tmp_path), 9, st)
+    st2 = _state(2)
+    save_checkpoint(str(tmp_path), 9, st2)
+    loaded, _, _ = load_checkpoint(str(tmp_path), st2)
+    np.testing.assert_array_equal(np.asarray(loaded["params"]["w"]),
+                                  np.asarray(st2["params"]["w"]))

@@ -1,0 +1,87 @@
+"""Practical constructor (§V-A) + patch edges (§V-B) + Theorem 2 scaling."""
+import numpy as np
+import pytest
+
+from repro.core import PATCH_VARIANTS, build_udg, build_udg_exact
+from repro.data import make_dataset
+
+
+@pytest.mark.parametrize("leap", ["conservative", "maxleap"])
+def test_leap_policies_build_and_label_invariants(leap):
+    vecs, s, t = make_dataset(200, 8, seed=1)
+    g, rep = build_udg(vecs, s, t, "containment", M=6, Z=24, leap=leap)
+    assert rep.num_tuples == g.num_tuples > 0
+    for u in range(g.n):
+        nbr, l, r, b, e = g.tuples(u)
+        assert np.all(l <= r) and np.all(b <= e)
+        assert np.all((nbr >= 0) & (nbr < g.n))
+        assert np.all(nbr != u)  # no self loops
+        # X label right boundary never exceeds either endpoint's X rank
+        assert np.all(r <= np.maximum(g.x_rank[u], 0) + g.num_x)  # sanity
+        assert np.all(r <= np.minimum(g.x_rank[nbr], g.x_rank[u]))
+
+
+def test_maxleap_fewer_rounds_than_conservative():
+    vecs, s, t = make_dataset(300, 8, seed=2)
+    _, rep_c = build_udg(vecs, s, t, "containment", M=6, Z=24, leap="conservative")
+    _, rep_m = build_udg(vecs, s, t, "containment", M=6, Z=24, leap="maxleap")
+    assert rep_m.sweep_rounds <= rep_c.sweep_rounds
+
+
+@pytest.mark.parametrize("variant", PATCH_VARIANTS)
+def test_patch_variants(variant):
+    vecs, s, t = make_dataset(150, 8, seed=3)
+    g, rep = build_udg(vecs, s, t, "overlap", M=6, Z=16, K_p=4, patch=variant)
+    if variant == "none":
+        assert rep.num_patch_tuples == 0
+    # patch labels obey the same rectangle invariants
+    for u in range(g.n):
+        nbr, l, r, b, e = g.tuples(u)
+        assert np.all(l <= r) and np.all(b <= e)
+
+
+def test_full_patch_adds_no_more_than_previous_none():
+    vecs, s, t = make_dataset(150, 8, seed=4)
+    _, rep_none = build_udg(vecs, s, t, "overlap", M=6, Z=16, patch="none")
+    _, rep_full = build_udg(vecs, s, t, "overlap", M=6, Z=16, K_p=4, patch="full")
+    assert rep_full.num_tuples >= rep_none.num_tuples
+    # patch edges bounded by O(n M): each object patches at most one range
+    assert rep_full.num_patch_tuples <= 2 * rep_full.n * 6
+
+
+def test_theorem2_rounds_scaling():
+    """Expected sweep rounds are O(n log n): rounds/n should grow ~log n,
+    far below the O(n) worst case."""
+    rates = []
+    for n in (100, 400):
+        vecs, s, t = make_dataset(n, 8, seed=5)
+        _, rep = build_udg_exact(vecs, s, t, "containment", M=4)
+        rates.append(rep.sweep_rounds / n)
+    # doubling n twice should far-less-than-double rounds/n (log growth)
+    assert rates[1] < rates[0] * 2.5
+    assert rates[1] < 0.25 * 400  # nowhere near the O(n) worst case
+
+
+def test_save_load_roundtrip(tmp_path):
+    from repro.core import LabeledGraph
+
+    vecs, s, t = make_dataset(80, 8, seed=6)
+    g, _ = build_udg(vecs, s, t, "containment", M=5, Z=16)
+    path = str(tmp_path / "udg.npz")
+    g.save(path)
+    g2 = LabeledGraph.load(path)
+    assert g2.num_tuples == g.num_tuples
+    for u in (0, 7, 42):
+        a, b_ = g.tuples(u), g2.tuples(u)
+        for x, y in zip(a, b_):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_bad_arguments():
+    vecs, s, t = make_dataset(30, 4, seed=0)
+    with pytest.raises(ValueError):
+        build_udg(vecs, s, t, "containment", leap="bogus")
+    with pytest.raises(ValueError):
+        build_udg(vecs, s, t, "containment", patch="bogus")
+    with pytest.raises(KeyError):
+        build_udg(vecs, s, t, "not-a-relation")

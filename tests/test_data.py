@@ -1,0 +1,82 @@
+"""Data pipeline: interval distributions, selectivity control, ground truth."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    INTERVAL_DISTRIBUTIONS,
+    generate_queries,
+    ground_truth,
+    make_dataset,
+    make_intervals,
+    make_queries_vectors,
+    recall_at_k,
+)
+from repro.core import get_relation
+
+
+@pytest.mark.parametrize("dist", sorted(INTERVAL_DISTRIBUTIONS))
+def test_interval_distributions_valid(dist):
+    s, t = make_intervals(500, distribution=dist, seed=1)
+    assert np.all(s <= t)
+    assert np.all(s >= 0) and np.all(t <= 1000.0)
+    # f32-exactness (device canonicalization contract)
+    np.testing.assert_array_equal(s, s.astype(np.float32).astype(np.float64))
+    if dist != "uncapped":
+        assert np.max(t - s) <= 10.0 + 1e-6  # 0.01 * T cap
+
+
+@pytest.mark.parametrize("relation,sigma", [
+    ("containment", 0.01), ("containment", 0.5), ("overlap", 0.01),
+    ("both_after", 0.1), ("both_before", 0.1),
+])
+def test_selectivity_control_exact(relation, sigma, small_dataset, query_vectors):
+    vecs, s, t = small_dataset
+    qs = generate_queries(query_vectors, s, t, relation, sigma, k=10, seed=12)
+    n = len(s)
+    floor = max(sigma, 10 / n)
+    med = np.median(qs.achieved_selectivity)
+    assert abs(med - floor) <= max(0.3 * floor, 2 / n), (relation, sigma, med)
+    assert np.all(qs.s_q <= qs.t_q)
+
+
+def test_query_within_data_needs_uncapped():
+    vecs, s, t = make_dataset(800, 8, distribution="uncapped", seed=13)
+    qv = make_queries_vectors(8, 8, seed=14)
+    qs = generate_queries(qv, s, t, "query_within_data", 0.01, k=5, seed=15)
+    rel = get_relation("query_within_data")
+    for i in range(qs.nq):
+        assert np.count_nonzero(rel.valid_mask(s, t, qs.s_q[i], qs.t_q[i])) >= 5
+
+
+def test_ground_truth_is_exact_topk(small_dataset, query_vectors):
+    vecs, s, t = small_dataset
+    qs = ground_truth(
+        generate_queries(query_vectors[:4], s, t, "overlap", 0.1, k=5, seed=16),
+        vecs, s, t,
+    )
+    rel = get_relation("overlap")
+    for i in range(qs.nq):
+        mask = rel.valid_mask(s, t, qs.s_q[i], qs.t_q[i])
+        ids = np.where(mask)[0]
+        d = np.sum((vecs[ids] - qs.vectors[i]) ** 2, axis=1)
+        best = set(ids[np.argsort(d)[:5]].tolist())
+        got = set(int(x) for x in qs.gt_ids[i] if x >= 0)
+        # allow distance ties to swap membership
+        assert len(got & best) >= 4
+
+
+def test_recall_at_k_bounds():
+    class QS:
+        nq = 2
+        gt_ids = np.array([[0, 1], [2, 3]])
+    assert recall_at_k(np.array([[0, 1], [2, 3]]), QS()) == 1.0
+    assert recall_at_k(np.array([[5, 6], [7, 8]]), QS()) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_vectors_deterministic(seed):
+    a = make_queries_vectors(4, 8, seed=seed)
+    b = make_queries_vectors(4, 8, seed=seed)
+    np.testing.assert_array_equal(a, b)

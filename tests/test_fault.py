@@ -1,0 +1,64 @@
+"""Fault handling: request batching sentinels + speculative shard dispatch."""
+import time
+
+import numpy as np
+
+from repro.serve.batching import RequestBatcher, SpeculativeDispatcher
+
+
+def test_batcher_pads_with_noop_sentinels():
+    b = RequestBatcher(batch_size=4, dim=3)
+    b.submit(np.ones(3), 1.0, 5.0)
+    b.submit(np.ones(3), 2.0, 6.0)
+    q, s_q, t_q, rids, n_real = b.next_batch()
+    assert q.shape == (4, 3) and n_real == 2 and rids == [0, 1]
+    # sentinel rows have s_q > t_q => empty valid set => no-op on device
+    assert np.all(s_q[2:] > t_q[2:])
+    assert b.next_batch() is None
+
+
+def test_batcher_splits_overflow():
+    b = RequestBatcher(batch_size=2, dim=1)
+    for i in range(5):
+        b.submit(np.zeros(1), 0.0, 1.0)
+    sizes = []
+    while (batch := b.next_batch()) is not None:
+        sizes.append(batch[4])
+    assert sizes == [2, 2, 1]
+
+
+def test_speculative_dispatch_on_slow_shard():
+    calls = {"primary": 0, "replica": 0}
+
+    def fast(x):
+        calls["primary"] += 1
+        return x + 1
+
+    def slow(x):
+        calls["primary"] += 1
+        time.sleep(0.05)
+        return x + 1
+
+    def replica(x):
+        calls["replica"] += 1
+        return x + 1
+
+    d = SpeculativeDispatcher(
+        primary=[fast, slow], replicas=[replica, replica], deadline_s=0.01
+    )
+    out = d.call_all(2, 10)
+    assert out == [11, 11]
+    assert d.respeculated == [1]          # only the slow shard re-dispatched
+    assert calls["replica"] == 1
+
+
+def test_speculative_dispatch_on_failing_shard():
+    def boom(x):
+        raise RuntimeError("shard down")
+
+    def replica(x):
+        return x * 2
+
+    d = SpeculativeDispatcher(primary=[boom], replicas=[replica], deadline_s=1.0)
+    assert d.call_all(1, 21) == [42]
+    assert d.respeculated == [0]

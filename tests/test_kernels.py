@@ -1,0 +1,86 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs pure-jnp
+oracles, across shapes and dtypes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+@pytest.mark.parametrize("bq,bc,d", [
+    (1, 1, 4), (7, 33, 16), (128, 128, 64), (37, 215, 70), (130, 50, 200),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_l2dist_matches_ref(bq, bc, d, dtype):
+    q = _arr((bq, d), dtype)
+    c = _arr((bc, d), dtype)
+    got = ops.l2dist(q, c)
+    want = ref.l2dist_ref(q, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_l2dist_is_true_squared_distance():
+    q = _arr((5, 12))
+    c = _arr((9, 12))
+    got = np.asarray(ops.l2dist(q, c))
+    brute = np.sum(
+        (np.asarray(q)[:, None, :] - np.asarray(c)[None, :, :]) ** 2, axis=-1
+    )
+    np.testing.assert_allclose(got, brute, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,e,d", [(1, 1, 4), (3, 17, 8), (8, 128, 32), (5, 200, 64)])
+def test_filter_dist_matches_ref(b, e, d):
+    q = _arr((b, d))
+    cand = _arr((b, e, d))
+    labels = jnp.asarray(RNG.integers(0, 12, size=(b, e, 4)).astype(np.int32))
+    state = jnp.asarray(RNG.integers(0, 12, size=(b, 2)).astype(np.int32))
+    ids = jnp.asarray(RNG.integers(-1, 40, size=(b, e)).astype(np.int32))
+    got = np.asarray(ops.filter_dist(q, cand, labels, state, ids))
+    want = np.asarray(ref.filter_dist_ref(q, cand, labels, state, ids))
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+def test_filter_dist_label_semantics():
+    """a in [l, r] and c in [b, e] — closed on both ends (paper §IV-A)."""
+    q = jnp.zeros((1, 4))
+    cand = jnp.ones((1, 3, 4))
+    #               active       a==r boundary   b > c (inactive)
+    labels = jnp.asarray([[[0, 5, 0, 5], [2, 2, 0, 5], [0, 5, 3, 5]]], dtype=jnp.int32)
+    state = jnp.asarray([[2, 2]], dtype=jnp.int32)
+    ids = jnp.asarray([[0, 1, 2]], dtype=jnp.int32)
+    out = np.asarray(ops.filter_dist(q, cand, labels, state, ids))
+    assert np.isfinite(out[0, 0]) and np.isfinite(out[0, 1])
+    assert np.isinf(out[0, 2])
+
+
+@pytest.mark.parametrize("bq,bc,d", [(4, 9, 8), (65, 200, 48)])
+def test_int8dist_matches_ref_and_f32(bq, bc, d):
+    q = _arr((bq, d))
+    c = _arr((bc, d))
+    cq, cs = ops.quantize_int8(c)
+    got = np.asarray(ops.int8_l2dist(q, cq, cs))
+    want = np.asarray(ref.int8_l2dist_ref(q, cq, cs))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    # quantization error vs exact f32 distances stays small & relative
+    exact = np.asarray(ref.l2dist_ref(q, c))
+    rel = np.abs(got - exact) / np.maximum(exact, 1e-3)
+    assert np.median(rel) < 0.05
+
+
+def test_quantize_int8_bounds():
+    v = _arr((20, 16))
+    q, scale = ops.quantize_int8(v)
+    assert q.dtype == jnp.int8
+    recon = np.asarray(q, dtype=np.float32) * np.asarray(scale)[:, None]
+    err = np.max(np.abs(recon - np.asarray(v)))
+    assert err <= np.max(np.abs(np.asarray(v))) / 127.0 * 0.51 + 1e-6

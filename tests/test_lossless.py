@@ -1,0 +1,74 @@
+"""Theorem 1 (structural lossless emulation) + Lemma 2 (edge validity).
+
+The exact constructor's active subgraph must be edge-identical to the
+dedicated insertion-only graph for EVERY canonical state (a, c) — checked
+exhaustively over the full U_X x U_Y grid on small datasets across
+relations, seeds, and M values.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_dedicated_reference, build_udg, build_udg_exact
+from repro.data import make_dataset
+
+
+def _check_all_states(g, M):
+    for a in range(g.num_x):
+        for c in range(g.num_y):
+            valid = np.where(g.valid_mask_rank(a, c))[0]
+            ref = build_dedicated_reference(g.vectors, valid, g.space.Y, M)
+            act = g.active_edge_set(a, c)
+            assert act == ref, (
+                f"state ({a},{c}): only-UDG={sorted(act - ref)[:4]} "
+                f"only-ref={sorted(ref - act)[:4]}"
+            )
+
+
+@pytest.mark.parametrize("relation", ["containment", "overlap", "both_before"])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_theorem1_lossless_all_states(relation, seed):
+    vecs, s, t = make_dataset(48, 8, seed=seed)
+    g, _ = build_udg_exact(vecs, s, t, relation, M=4)
+    _check_all_states(g, 4)
+
+
+def test_theorem1_larger_M():
+    vecs, s, t = make_dataset(40, 6, seed=11)
+    g, _ = build_udg_exact(vecs, s, t, "overlap", M=8)
+    _check_all_states(g, 8)
+
+
+def test_theorem1_with_duplicate_endpoints():
+    """Ties in transformed coordinates must not break the induction."""
+    rng = np.random.default_rng(5)
+    vecs = rng.normal(size=(40, 6)).astype(np.float32)
+    s = np.round(rng.uniform(0, 10, 40))   # heavy duplication
+    t = s + np.round(rng.uniform(0, 5, 40))
+    g, _ = build_udg_exact(vecs, s, t, "containment", M=4)
+    _check_all_states(g, 4)
+
+
+@pytest.mark.parametrize("relation", ["containment", "overlap", "both_after"])
+def test_lemma2_edge_validity_practical(relation):
+    """Every ACTIVE edge of the practical index connects valid endpoints —
+    for every canonical state (Lemma 2 extends to patch edges, §V-B)."""
+    vecs, s, t = make_dataset(80, 8, seed=2)
+    g, _ = build_udg(vecs, s, t, relation, M=6, Z=24, K_p=4)
+    rng = np.random.default_rng(0)
+    states = [(int(rng.integers(0, g.num_x)), int(rng.integers(0, g.num_y)))
+              for _ in range(60)]
+    for a, c in states:
+        valid = g.valid_mask_rank(a, c)
+        for u, v in g.active_edge_set(a, c):
+            assert valid[u] and valid[v], (a, c, u, v)
+
+
+def test_exact_constructor_with_graph_search_still_valid():
+    """Alg. 3 with real UDGSearch (no ASA): Lemma 2 still holds exactly."""
+    vecs, s, t = make_dataset(40, 6, seed=4)
+    g, _ = build_udg_exact(vecs, s, t, "containment", M=4, use_graph_search=True)
+    for a in range(0, g.num_x, 7):
+        for c in range(0, g.num_y, 7):
+            valid = g.valid_mask_rank(a, c)
+            for u, v in g.active_edge_set(a, c):
+                assert valid[u] and valid[v]

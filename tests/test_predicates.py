@@ -1,0 +1,84 @@
+"""Table II semantic mappings + Lemma 1 canonicalization (property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predicates import (
+    RELATIONS,
+    DominanceSpace,
+    canonical_state_for_query,
+    get_relation,
+)
+
+RELATION_NAMES = sorted(RELATIONS)
+
+
+def _intervals(draw, n):
+    s = draw(st.lists(st.floats(0, 100, allow_nan=False, width=32),
+                      min_size=n, max_size=n))
+    ln = draw(st.lists(st.floats(0, 30, allow_nan=False, width=32),
+                       min_size=n, max_size=n))
+    s = np.asarray(s, dtype=np.float64)
+    t = s + np.asarray(ln, dtype=np.float64)
+    return s, t
+
+
+@pytest.mark.parametrize("rel_name", RELATION_NAMES)
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_mapping_matches_brute_predicate(rel_name, data):
+    """Eq.(1) over transformed coords == the original interval predicate."""
+    rel = get_relation(rel_name)
+    n = data.draw(st.integers(3, 40))
+    s, t = _intervals(data.draw, n)
+    s_q = data.draw(st.floats(-10, 110, allow_nan=False, width=32))
+    t_q = s_q + data.draw(st.floats(0, 60, allow_nan=False, width=32))
+    X, Y = rel.transform_data(s, t)
+    x_q, y_q = rel.transform_query(s_q, t_q)
+    dominance = (X >= x_q) & (Y <= y_q)
+    brute = rel.valid_mask(s, t, s_q, t_q)
+    np.testing.assert_array_equal(dominance, brute, err_msg=rel_name)
+
+
+@pytest.mark.parametrize("rel_name", RELATION_NAMES)
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_lemma1_canonicalization_exact(rel_name, data):
+    """Raw and canonical transformed queries select identical valid sets."""
+    rel = get_relation(rel_name)
+    n = data.draw(st.integers(3, 40))
+    s, t = _intervals(data.draw, n)
+    space = DominanceSpace.from_intervals(rel, s, t)
+    s_q = data.draw(st.floats(-10, 110, allow_nan=False, width=32))
+    t_q = s_q + data.draw(st.floats(0, 60, allow_nan=False, width=32))
+    x_q, y_q = rel.transform_query(s_q, t_q)
+    raw = (space.X >= x_q) & (space.Y <= y_q)
+    state = space.canonicalize(x_q, y_q)
+    if state is None:
+        assert not np.any(raw)
+        return
+    a, c = state
+    canon = space.valid_mask_state(a, c)
+    np.testing.assert_array_equal(raw, canon)
+    # canonical values come from the data grids
+    assert a in space.U_X and c in space.U_Y
+
+
+def test_query_unmap_roundtrip():
+    for name, rel in RELATIONS.items():
+        xq, yq = rel.transform_query(3.5, 9.25)
+        assert rel.query_unmap(xq, yq) == (3.5, 9.25), name
+
+
+def test_unknown_relation_raises():
+    with pytest.raises(KeyError):
+        get_relation("strictly-before")
+
+
+def test_canonical_state_for_query_empty():
+    rel = get_relation("containment")
+    s = np.array([10.0, 20.0])
+    t = np.array([15.0, 25.0])
+    space = DominanceSpace.from_intervals(rel, s, t)
+    # query start after every data start -> successor undefined -> empty
+    assert canonical_state_for_query(rel, space, 50.0, 60.0) is None

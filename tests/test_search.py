@@ -1,0 +1,83 @@
+"""Algorithm 2 (host search), entry table, and end-to-end recall."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EntryTable,
+    SearchStats,
+    build_index,
+    get_relation,
+    search_query,
+    udg_search,
+)
+from repro.data import generate_queries, ground_truth, make_dataset, recall_at_k
+
+from conftest import pad_ids
+
+
+@pytest.fixture(scope="module")
+def index(small_dataset):
+    vecs, s, t = small_dataset
+    g, et, _ = build_index(vecs, s, t, "containment", M=10, Z=48, K_p=8)
+    return g, et
+
+
+def test_entry_table_valid_iff_nonempty(index, small_dataset):
+    g, et = index
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        a = int(rng.integers(0, g.num_x))
+        c = int(rng.integers(0, g.num_y))
+        ep = et.entry(a, c)
+        nonempty = bool(np.any(g.valid_mask_rank(a, c)))
+        assert (ep is not None) == nonempty
+        if ep is not None:
+            assert g.x_rank[ep] >= a and g.y_rank[ep] <= c
+
+
+def test_search_returns_only_valid(index, small_dataset, query_vectors):
+    vecs, s, t = small_dataset
+    g, et = index
+    rel = get_relation("containment")
+    qs = generate_queries(query_vectors, s, t, "containment", 0.02, k=10, seed=5)
+    for i in range(qs.nq):
+        ids, dists = search_query(g, qs.vectors[i], qs.s_q[i], qs.t_q[i], 10, 48, et)
+        mask = rel.valid_mask(s, t, qs.s_q[i], qs.t_q[i])
+        assert all(mask[j] for j in ids)
+        assert np.all(np.diff(dists) >= 0)  # ascending
+
+
+@pytest.mark.parametrize("sigma,ef", [(0.01, 64), (0.1, 64), (0.5, 128)])
+def test_recall_against_bruteforce(index, small_dataset, query_vectors, sigma, ef):
+    """Broad states need a larger beam, matching the paper's method of
+    sweeping query-time parameters per operating point."""
+    vecs, s, t = small_dataset
+    g, et = index
+    qs = ground_truth(
+        generate_queries(query_vectors, s, t, "containment", sigma, k=10, seed=6),
+        vecs, s, t,
+    )
+    res = np.stack([
+        pad_ids(search_query(g, qs.vectors[i], qs.s_q[i], qs.t_q[i], 10, ef, et)[0], 10)
+        for i in range(qs.nq)
+    ])
+    assert recall_at_k(res, qs) >= 0.95, sigma
+
+
+def test_empty_state_returns_nothing(index, small_dataset):
+    vecs, s, t = small_dataset
+    g, et = index
+    # an impossible containment interval (start beyond every data start)
+    ids, dists = search_query(g, vecs[0], s.max() + 1, s.max() + 2, 10, 32, et)
+    assert ids.size == 0
+
+
+def test_search_stats_counted(index, small_dataset):
+    vecs, s, t = small_dataset
+    g, et = index
+    stats = SearchStats()
+    state = g.canonical_rank_state(float(np.quantile(s, 0.2)), float(np.quantile(t, 0.9)))
+    assert state is not None
+    ep = et.entry(*state)
+    udg_search(g, vecs[3], state[0], state[1], ep, 16, stats=stats)
+    assert stats.dist_evals > 0 and stats.hops > 0

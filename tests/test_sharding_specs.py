@@ -1,0 +1,88 @@
+"""Sharding-rule invariants on the abstract production meshes (no devices
+needed): every assigned axis must divide its dimension, for every parameter
+/ optimizer / cache / batch leaf of every architecture and shape. This is
+the class of bug (e.g. 8 KV heads on a 16-way model axis) that otherwise
+only surfaces deep inside the 512-device dry-run."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_supported
+from repro.distributed.sharding import (
+    batch_spec,
+    cache_specs,
+    logits_spec,
+    opt_state_specs,
+    param_specs,
+)
+from repro.models import init_decode_state, init_params_shapes
+from repro.train import adamw
+
+MESHES = [
+    jax.sharding.AbstractMesh((16, 16), ("data", "model")),
+    jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+]
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return int(mesh.shape[axes])
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _check(tree, specs, mesh, what):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    )
+    assert len(leaves) == len(spec_leaves), what
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        assert len(spec) <= len(leaf.shape), (what, path, spec, leaf.shape)
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            size = _axis_size(mesh, axes)
+            assert dim % size == 0, (
+                f"{what}: {jax.tree_util.keystr(path)} dim {dim} not "
+                f"divisible by {axes} (={size})"
+            )
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_and_opt_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    params = init_params_shapes(cfg)
+    pspecs = param_specs(params, cfg, mesh)
+    _check(params, pspecs, mesh, f"{arch} params")
+    opt = adamw()
+    opt_sh = jax.eval_shape(opt.init, params)
+    ospecs = opt_state_specs(opt_sh, pspecs)
+    _check(opt_sh, ospecs, mesh, f"{arch} opt")
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, mesh, shape):
+    cfg = get_config(arch)
+    ok, _ = shape_supported(cfg, shape)
+    if not ok:
+        pytest.skip("long_500k rule")
+    sh = SHAPES[shape]
+    cache = jax.eval_shape(
+        lambda: init_decode_state(cfg, sh.global_batch, sh.seq_len)
+    )
+    cspecs = cache_specs(cache, cfg, mesh)
+    _check(cache, cspecs, mesh, f"{arch} {shape} cache")
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+def test_batch_and_logits_specs(mesh):
+    for b in (1, 32, 128, 256):
+        spec = batch_spec(mesh, (b, 4096))
+        assert b % _axis_size(mesh, tuple(spec)[0]) == 0
+    for b, v in ((1, 256000), (128, 2048), (32, 262144)):
+        spec = logits_spec(mesh, (b, v))
+        assert b % _axis_size(mesh, tuple(spec)[0]) == 0
+        assert v % _axis_size(mesh, tuple(spec)[-1]) == 0
