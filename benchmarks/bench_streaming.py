@@ -1,0 +1,140 @@
+"""Streaming index benchmark (ISSUE 1): insert/delete/query interleave,
+recall vs delta fraction, and compaction pause time.
+
+Rows:
+  stream_insert / stream_delete     mean µs per online mutation
+  stream_query_frac<f>              batched query µs/query at a given
+                                    mutable (delta+tombstone) fraction, with
+                                    recall vs the exact live-set top-k and
+                                    the overhead relative to frac=0
+  stream_compaction                 full rebuild seconds (background work)
+                                    vs swap pause (what queries observe)
+  stream_epoch_stability            jit cache entries across epoch swaps
+                                    (must stay at 1: no recompile)
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import DIM, K, N, NQ, dataset, emit
+from repro.core import get_relation
+from repro.data import make_queries_vectors
+from repro.stream import (
+    CompactionPolicy,
+    StreamingIndex,
+    streaming_search_cache_size,
+)
+
+RELATION = "containment"
+BEAM = 64
+
+
+def _broad_queries(s, t, nq):
+    rng = np.random.default_rng(11)
+    qv = make_queries_vectors(nq, DIM, seed=11)
+    lo = rng.uniform(s.min(), np.quantile(s, 0.5), size=nq)
+    hi = np.minimum(lo + rng.uniform(0.1, 1.0, size=nq) * (t.max() - s.min()),
+                    t.max())
+    return qv, lo, hi
+
+
+def _exact_recall(idx, qv, s_q, t_q, ids):
+    rel = get_relation(RELATION)
+    lv, ls, lt, lext = idx.snapshot_live()
+    hits = total = 0
+    for i in range(len(qv)):
+        m = rel.valid_mask(ls, lt, s_q[i], t_q[i])
+        if not m.any():
+            continue
+        d = ((lv[m] - qv[i]) ** 2).sum(axis=1)
+        gt = set(int(x) for x in lext[m][np.argsort(d)][:K])
+        got = set(int(x) for x in ids[i] if x >= 0)
+        hits += len(gt & got)
+        total += len(gt)
+    return hits / max(total, 1)
+
+
+def main() -> None:
+    vecs, s, t = dataset()
+    n0 = N // 2
+    extra = min(N - n0, n0)
+    idx = StreamingIndex(
+        DIM, RELATION,
+        node_capacity=max(2 * N, 1024),
+        delta_capacity=1024,
+        edge_capacity=128,
+        M=12, Z=48,
+        policy=CompactionPolicy(max_delta_fraction=0.3, min_mutations=128),
+    )
+    ext = idx.insert_batch(vecs[:n0], s[:n0], t[:n0])
+    idx.compact()
+    qv, s_q, t_q = _broad_queries(s, t, NQ)
+
+    def timed_query():
+        t0 = time.perf_counter()
+        ids, _ = idx.search(qv, s_q, t_q, k=K, beam=BEAM, use_ref=True)
+        return ids, (time.perf_counter() - t0) / NQ * 1e6
+
+    idx.search(qv, s_q, t_q, k=K, beam=BEAM, use_ref=True)  # warm the jit
+    cache0 = streaming_search_cache_size()
+
+    # --- query cost/recall as the mutable fraction grows ----------------------
+    base_us = None
+    cursor = n0
+    for frac in (0.0, 0.05, 0.1, 0.2):
+        target_mut = int(frac * idx.live_count)
+        while idx.delta_fraction < frac and cursor < n0 + extra:
+            if cursor % 3 == 0 and target_mut:
+                idx.delete(int(ext[cursor % n0]))
+            idx.insert(vecs[cursor], s[cursor], t[cursor])
+            cursor += 1
+        ids, us = timed_query()
+        if base_us is None:
+            base_us = us
+        emit(
+            f"stream_query_frac{frac:g}", us,
+            recall=round(_exact_recall(idx, qv, s_q, t_q, ids), 4),
+            delta_fraction=round(idx.delta_fraction, 4),
+            overhead_pct=round(100.0 * (us - base_us) / base_us, 1),
+            live=idx.live_count,
+        )
+
+    # --- mutation cost ---------------------------------------------------------
+    n_ins = min(512, idx.delta_capacity - idx._delta.size - 1)
+    t0 = time.perf_counter()
+    new_ext = idx.insert_batch(
+        vecs[:n_ins], s[:n_ins], t[:n_ins]
+    )
+    ins_us = (time.perf_counter() - t0) / max(n_ins, 1) * 1e6
+    emit("stream_insert", ins_us, ops=n_ins)
+    t0 = time.perf_counter()
+    for e in new_ext:
+        idx.delete(int(e))
+    del_us = (time.perf_counter() - t0) / max(n_ins, 1) * 1e6
+    emit("stream_delete", del_us, ops=n_ins)
+
+    # --- compaction: background build vs observed pause ------------------------
+    job = idx.begin_compaction()
+    idx.build_epoch(job)          # runs off the serving path in production
+    _, pre_us = timed_query()     # queries keep serving epoch N meanwhile
+    rep = idx.finish_compaction(job)
+    _, post_us = timed_query()
+    emit(
+        "stream_compaction", rep.build_seconds * 1e6,
+        swap_pause_ms=round(rep.swap_seconds * 1e3, 3),
+        n_live=rep.n_live,
+        delta_drained=rep.delta_drained,
+        tombstones_cleared=rep.tombstones_cleared,
+        query_us_pre_swap=round(pre_us, 1),
+        query_us_post_swap=round(post_us, 1),
+    )
+
+    # --- static-shape guarantee ------------------------------------------------
+    cache1 = streaming_search_cache_size()
+    assert cache1 == cache0, f"epoch swap recompiled: {cache0} -> {cache1}"
+    emit("stream_epoch_stability", 0.0, jit_cache_entries=cache1,
+         epochs=idx.epoch)
+
+
+if __name__ == "__main__":
+    main()

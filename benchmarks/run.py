@@ -21,6 +21,7 @@ from benchmarks import (
     bench_kernels,
     bench_batched,
     bench_serving,
+    bench_streaming,
 )
 
 ALL = [
@@ -35,6 +36,7 @@ ALL = [
     ("kernels", bench_kernels.main),
     ("batched_search", bench_batched.main),
     ("distributed_serving", bench_serving.main),
+    ("streaming_index", bench_streaming.main),
 ]
 
 

@@ -10,6 +10,13 @@ with E = max labeled degree rounded up to a lane multiple. Entry lookup and
 canonicalization grids ride along so a query can be served end-to-end on
 device. Optionally carries int8-quantized vectors for the bandwidth-saving
 distance path.
+
+For the streaming subsystem (repro.stream) the export additionally supports
+*fixed capacities*: node and edge dimensions padded to caller-chosen static
+sizes so the jitted serving step sees one shape across compaction epochs,
+plus a ``DeltaSegment`` — the statically-sized device view of the mutable
+delta tier (append-only vectors + per-slot label rectangles encoding the
+interval predicate in monotone float-key space).
 """
 from __future__ import annotations
 
@@ -49,27 +56,49 @@ class DeviceGraph:
 
 
 def export_device_graph(
-    g: LabeledGraph, et: EntryTable | None = None, *, lane: int = 8
+    g: LabeledGraph,
+    et: EntryTable | None = None,
+    *,
+    lane: int = 8,
+    node_capacity: int | None = None,
+    edge_capacity: int | None = None,
 ) -> DeviceGraph:
-    """Pad the host adjacency into dense arrays (E = max degree, lane-aligned)."""
+    """Pad the host adjacency into dense arrays (E = max degree, lane-aligned).
+
+    ``node_capacity``/``edge_capacity`` fix the padded dims to static sizes
+    (for epoch-swapped streaming serving). Padding node rows carry no edges
+    and are unreachable (never referenced by ``nbr`` or the entry table).
+    Rows whose labeled degree exceeds ``edge_capacity`` keep their earliest
+    tuples — those come from the threshold sweep (the connectivity-critical
+    edges); patch tuples are appended last and are the first to be dropped.
+    """
     if et is None:
         et = EntryTable(g)
     degs = [g.adj[u].size for u in range(g.n)]
     E = max(degs) if degs else 1
     E = max(((E + lane - 1) // lane) * lane, lane)
-    nbr = np.full((g.n, E), -1, dtype=np.int32)
-    labels = np.zeros((g.n, E, 4), dtype=np.int32)
+    if edge_capacity is not None:
+        E = edge_capacity
+    n_pad = g.n if node_capacity is None else node_capacity
+    if n_pad < g.n:
+        raise ValueError(f"node_capacity {n_pad} < graph size {g.n}")
+    nbr = np.full((n_pad, E), -1, dtype=np.int32)
+    labels = np.zeros((n_pad, E, 4), dtype=np.int32)
     for u in range(g.n):
         nb, l, r, b, e = g.tuples(u)
-        k = nb.shape[0]
-        nbr[u, :k] = nb
-        labels[u, :k, 0] = l
-        labels[u, :k, 1] = r
-        labels[u, :k, 2] = b
-        labels[u, :k, 3] = e
+        k = min(nb.shape[0], E)
+        nbr[u, :k] = nb[:k]
+        labels[u, :k, 0] = l[:k]
+        labels[u, :k, 1] = r[:k]
+        labels[u, :k, 2] = b[:k]
+        labels[u, :k, 3] = e[:k]
+    vectors = g.vectors
+    if n_pad > g.n:
+        vectors = np.zeros((n_pad, g.dim), dtype=np.float32)
+        vectors[: g.n] = g.vectors
     ent = et.device_arrays()
     return DeviceGraph(
-        vectors=g.vectors,
+        vectors=vectors,
         nbr=nbr,
         labels=labels,
         U_X=g.space.U_X.copy(),
@@ -78,3 +107,32 @@ def export_device_graph(
         entry_y_rank=ent["entry_y_rank"],
         relation=g.relation.name,
     )
+
+
+@dataclasses.dataclass
+class DeltaSegment:
+    """Statically-shaped device view of the mutable delta tier.
+
+    ``labels`` rectangles are in *monotone float-key space* (see
+    ``repro.stream.delta.sort_key``): slot i is active for query key state
+    (a, c) iff ``l <= a <= r and b <= c <= e`` with
+    ``(l, r, b, e) = (INT32_MIN, key(X_i), key(Y_i), INT32_MAX)`` — exactly
+    the predicate ``X_i >= x_q and Y_i <= y_q`` of Eq. (1), evaluated by the
+    same fused Pallas ``filter_dist`` kernel as graph-tier edges. Dead /
+    unwritten slots have ``slot_ids = -1`` (kernel-masked) and an empty
+    rectangle.
+    """
+
+    vectors: np.ndarray    # [C, d] f32
+    labels: np.ndarray     # [C, 4] int32 key-space rectangles
+    slot_ids: np.ndarray   # [C] int32, slot index or -1 = dead
+    ext_ids: np.ndarray    # [C] int32 external ids (-1 = dead)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.vectors.shape[0])
+
+    def nbytes(self) -> int:
+        return sum(
+            a.nbytes for a in (self.vectors, self.labels, self.slot_ids, self.ext_ids)
+        )

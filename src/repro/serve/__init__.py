@@ -2,16 +2,23 @@
 request batching, and straggler mitigation."""
 from repro.serve.distributed import (
     ShardedIndex,
+    ShardedStreamingIndex,
     build_sharded_index,
     make_serving_step,
+    make_streaming_serving_step,
     serve_batch,
+    serve_streaming_batch,
 )
-from repro.serve.batching import RequestBatcher
+from repro.serve.batching import RequestBatcher, StreamingServer
 
 __all__ = [
     "RequestBatcher",
     "ShardedIndex",
+    "ShardedStreamingIndex",
+    "StreamingServer",
     "build_sharded_index",
     "make_serving_step",
+    "make_streaming_serving_step",
     "serve_batch",
+    "serve_streaming_batch",
 ]

@@ -9,12 +9,19 @@ scale: each shard RPC gets a deadline; shards that miss it are speculatively
 re-dispatched to their replica, and the first response wins. On a single
 host this is exercised with injected delays (tests/test_fault.py); on a real
 fleet the same policy object wraps the per-pod RPC layer.
+
+``StreamingServer`` is the online-serving front end over a
+``repro.stream.StreamingIndex``: the same fixed-shape batcher feeding the
+jitted two-tier streaming search, plus epoch-swapped background compaction —
+epoch N keeps serving while epoch N+1 builds on a worker thread, then the
+swap is atomic and shape-stable (no recompile).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -97,3 +104,103 @@ class SpeculativeDispatcher:
 
     def call_all(self, nshards: int, *args) -> List[object]:
         return [self.call_shard(i, *args) for i in range(nshards)]
+
+
+class StreamingServer:
+    """Batched online serving over a ``StreamingIndex`` with background
+    epoch-swap compaction.
+
+    ``step()`` drains one fixed-shape batch through the jitted streaming
+    search. ``maybe_compact_async()`` kicks the LSM compaction policy: the
+    expensive UDG rebuild runs on a worker thread against a snapshot while
+    queries keep hitting the current epoch; ``finish_compaction`` then swaps
+    the epoch atomically (queries in flight hold a consistent snapshot of
+    exactly one epoch — the swap replaces whole-epoch references under the
+    index lock).
+    """
+
+    def __init__(
+        self,
+        index,
+        *,
+        batch_size: int = 8,
+        k: int = 10,
+        beam: int = 64,
+        use_ref: bool = True,
+        timeout_s: float = 0.01,
+    ):
+        self.index = index
+        self.k = k
+        self.beam = beam
+        self.use_ref = use_ref
+        self.batcher = RequestBatcher(batch_size, index.dim, timeout_s=timeout_s)
+        self._worker: Optional[threading.Thread] = None
+        self._worker_err: Optional[BaseException] = None
+        self.compactions: List[object] = []
+
+    # --- mutations (pass-through) --------------------------------------------
+
+    def insert(self, vec: np.ndarray, s: float, t: float) -> int:
+        return self.index.insert(vec, s, t)
+
+    def delete(self, ext_id: int) -> bool:
+        return self.index.delete(ext_id)
+
+    # --- queries --------------------------------------------------------------
+
+    def submit(self, qvec: np.ndarray, s_q: float, t_q: float) -> int:
+        return self.batcher.submit(qvec, s_q, t_q)
+
+    def step(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        """Drain one batch; returns {req_id: (ext_ids [k], dists [k])}."""
+        batch = self.batcher.next_batch()
+        if batch is None:
+            return {}
+        q, s_q, t_q, req_ids, n_real = batch
+        ids, d = self.index.search(
+            q, s_q, t_q, k=self.k, beam=self.beam, use_ref=self.use_ref
+        )
+        return {rid: (ids[i], d[i]) for i, rid in enumerate(req_ids[:n_real])}
+
+    def drain(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        while self.batcher.pending:
+            out.update(self.step())
+        return out
+
+    # --- background compaction ------------------------------------------------
+
+    @property
+    def compacting(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def maybe_compact_async(self) -> bool:
+        """Start a background compaction if the policy says so. Returns True
+        when a build was started (or is already running)."""
+        if self.compacting:
+            return True
+        self.join_compaction()
+        if not self.index.should_compact():
+            return False
+        job = self.index.begin_compaction()
+
+        def run():
+            try:
+                self.index.build_epoch(job)
+                self.compactions.append(self.index.finish_compaction(job))
+            except BaseException as exc:  # surfaced by join_compaction
+                self._worker_err = exc
+                self.index.abort_compaction()
+
+        self._worker = threading.Thread(target=run, name="udg-compaction", daemon=True)
+        self._worker.start()
+        return True
+
+    def join_compaction(self) -> None:
+        """Wait for an in-flight background compaction (re-raising failures)."""
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._worker_err is not None:
+            err, self._worker_err = self._worker_err, None
+            raise err

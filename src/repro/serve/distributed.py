@@ -30,6 +30,7 @@ from repro.core.entry import EntryTable
 from repro.core.predicates import get_relation
 from repro.search.batched import _batched_search_core
 from repro.search.device_graph import export_device_graph
+from repro.distributed.compat import shard_map as _shard_map
 
 
 @dataclasses.dataclass
@@ -40,7 +41,8 @@ class ShardedIndex:
     nbr: np.ndarray           # [shards, n_l, E]
     labels: np.ndarray        # [shards, n_l, E, 4]
     U_X: np.ndarray           # [shards, ux_max] f32, +inf padded
-    U_Y: np.ndarray           # [shards, uy_max] f32, -inf padded (prefix real)
+    U_Y: np.ndarray           # [shards, uy_max] f32, +inf padded (keeps the
+                              # row sorted, so device searchsorted is exact)
     num_y: np.ndarray         # [shards] int32 actual |U_Y| per shard
     entry_node: np.ndarray    # [shards, ux_max] int32
     entry_y_rank: np.ndarray  # [shards, ux_max] int32
@@ -85,7 +87,7 @@ def build_sharded_index(
     nbr = np.stack([padE(dg.nbr, E, -1) for dg in dgs])
     lab = np.stack([padE(dg.labels, E, 0) for dg in dgs])
     UX = np.full((num_shards, ux), np.inf, np.float32)
-    UY = np.full((num_shards, uy), -np.inf, np.float32)
+    UY = np.full((num_shards, uy), np.inf, np.float32)
     ent = np.full((num_shards, ux), -1, np.int32)
     enty = np.full((num_shards, ux), np.iinfo(np.int32).max, np.int32)
     num_y = np.zeros(num_shards, np.int32)
@@ -103,11 +105,20 @@ def build_sharded_index(
 
 
 def _canonicalize_local(UX, UY, num_y, ent, enty, xq, yq):
-    """Device-side Lemma 1 snap onto shard-local canonical grids."""
+    """Device-side Lemma 1 snap onto shard-local canonical grids.
+
+    Both grids are padded with trailing +inf, which keeps each row sorted so
+    ``searchsorted`` is exact, and guarantees ``c <= num_y - 1`` for finite
+    queries (the clamp is a belt-and-braces no-op). The historical -inf
+    Y-padding broke sortedness: binary search could land in the pad region
+    and the old ``c >= num_y -> invalid`` guard then silently dropped the
+    whole shard from perfectly valid (often broad) queries.
+    """
     a = jnp.searchsorted(UX, xq, side="left").astype(jnp.int32)
     c = (jnp.searchsorted(UY, yq, side="right") - 1).astype(jnp.int32)
     num_x = UX.shape[0]
-    invalid = (a >= num_x) | (c < 0) | (c >= num_y)
+    c = jnp.minimum(c, num_y - 1)
+    invalid = (a >= num_x) | (c < 0)
     a_cl = jnp.clip(a, 0, num_x - 1)
     ep = ent[a_cl]
     ep = jnp.where(invalid | (ep < 0) | (enty[a_cl] > c), -1, ep)
@@ -187,13 +198,7 @@ def make_serving_step(
     )
     if int8_vectors:
         in_specs = in_specs + (shard_spec,)
-    fn = jax.shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(qspec, qspec),
-        check_vma=False,
-    )
+    fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
     return jax.jit(fn)
 
 
@@ -230,3 +235,260 @@ def serve_batch(
     local = gids % idx.n_local
     orig = np.where(gids >= 0, local * idx.num_shards + shard, -1)
     return orig, d
+
+
+# --- streaming (online mutations + per-shard epoch swap) -----------------------
+
+
+class ShardedStreamingIndex:
+    """One ``StreamingIndex`` per shard with round-robin insert routing.
+
+    External ids are globally unique (shard s uses ids ≡ s mod S), so
+    ``delete`` and result merging need no translation tables. Compaction is
+    *per shard*: ``maybe_compact_shards`` rebuilds at most one shard per
+    call, so at any instant at most one shard is paused in its (sub-ms)
+    epoch swap while the rest keep serving — the distributed analogue of the
+    single-host epoch swap.
+
+    Every shard shares one static serving shape (same capacities), so the
+    jitted streaming step — single-host or the ``make_streaming_serving_step``
+    mesh version below — is compiled once for the whole fleet and survives
+    every per-shard swap.
+    """
+
+    def __init__(
+        self,
+        dim: int,
+        relation: str,
+        num_shards: int,
+        **kwargs,
+    ):
+        from repro.stream import StreamingIndex
+
+        self.dim = dim
+        self.relation = relation
+        self.num_shards = num_shards
+        self.shards = [
+            StreamingIndex(
+                dim, relation, id_start=sh, id_stride=num_shards, **kwargs
+            )
+            for sh in range(num_shards)
+        ]
+        self._rr = 0
+
+    # --- mutations ------------------------------------------------------------
+
+    def insert(self, vec: np.ndarray, s: float, t: float) -> int:
+        sh = self._rr
+        self._rr = (self._rr + 1) % self.num_shards
+        return self.shards[sh].insert(vec, s, t)
+
+    def insert_batch(self, vecs, s, t) -> np.ndarray:
+        return np.array(
+            [self.insert(vecs[i], s[i], t[i]) for i in range(len(vecs))],
+            dtype=np.int64,
+        )
+
+    def delete(self, ext_id: int) -> bool:
+        return self.shards[int(ext_id) % self.num_shards].delete(ext_id)
+
+    @property
+    def live_count(self) -> int:
+        return sum(sh.live_count for sh in self.shards)
+
+    def maybe_compact_shards(self) -> int:
+        """Compact the single most-mutated shard over threshold (staggered
+        swaps). Returns the shard index, or -1 if none qualified."""
+        cand = [
+            (sh.delta_fraction, i)
+            for i, sh in enumerate(self.shards)
+            if sh.should_compact()
+        ]
+        if not cand:
+            return -1
+        _, i = max(cand)
+        self.shards[i].compact()
+        return i
+
+    # --- host-merge query path ------------------------------------------------
+
+    def search(
+        self, q, s_q, t_q, *, k: int = 10, beam: int = 64, use_ref: bool = True
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Query every shard (one shared jit trace) and merge per-shard
+        top-k by distance. Top-k over a union = merge of per-shard top-k."""
+        per = [
+            sh.search(q, s_q, t_q, k=k, beam=beam, use_ref=use_ref)
+            for sh in self.shards
+        ]
+        all_ids = np.concatenate([p[0] for p in per], axis=1)
+        all_d = np.concatenate([p[1] for p in per], axis=1)
+        all_d = np.where(all_ids >= 0, all_d, np.inf)
+        order = np.argsort(all_d, axis=1, kind="stable")[:, :k]
+        return (
+            np.take_along_axis(all_ids, order, 1),
+            np.take_along_axis(all_d, order, 1),
+        )
+
+    # --- mesh (shard_map) query path ------------------------------------------
+
+    def stacked_arrays(self) -> dict:
+        """Stack every shard's epoch + delta arrays on a leading shard dim.
+
+        All dims are capacity-static: refreshing a shard after its epoch
+        swap (``refresh_shard``) republishes one slice copy-on-write and the
+        jitted mesh step keeps its single compiled program.
+        """
+        S = self.num_shards
+        sh0 = self.shards[0]
+        ncap, dcap = sh0.node_capacity, sh0.delta_capacity
+        ecap, dim = sh0.edge_capacity, sh0.dim
+        out = {
+            "vectors": np.zeros((S, ncap, dim), np.float32),
+            "nbr": np.full((S, ncap, ecap), -1, np.int32),
+            "labels": np.zeros((S, ncap, ecap, 4), np.int32),
+            "live": np.zeros((S, ncap), bool),
+            "ext": np.full((S, ncap), -1, np.int32),
+            "dvec": np.zeros((S, dcap, dim), np.float32),
+            "dlab": np.zeros((S, dcap, 4), np.int32),
+            "dids": np.full((S, dcap), -1, np.int32),
+            "dext": np.full((S, dcap), -1, np.int32),
+            "U_X": np.full((S, ncap), np.inf, np.float32),
+            "U_Y": np.full((S, ncap), np.inf, np.float32),
+            "num_y": np.zeros(S, np.int32),
+            "entry_node": np.full((S, ncap), -1, np.int32),
+            "entry_y_rank": np.full((S, ncap), np.iinfo(np.int32).max, np.int32),
+        }
+        for i in range(S):
+            self._write_shard(out, i)
+        return out
+
+    def refresh_shard(self, stacked: dict, i: int) -> dict:
+        """Per-shard epoch swap in the distributed path: republish shard i's
+        current epoch (a consistent snapshot taken under the shard's lock).
+
+        Copy-on-write: returns a NEW dict with fresh arrays; the caller
+        swaps its reference atomically, so a serving thread holding the old
+        dict keeps a complete epoch-N view and can never observe a torn
+        (half-rewritten) shard."""
+        fresh = {key: a.copy() for key, a in stacked.items()}
+        self._write_shard(fresh, i)
+        return fresh
+
+    def _write_shard(self, stacked: dict, i: int) -> None:
+        sh = self.shards[i]
+        with sh._lock:
+            dg = sh._dg
+            live = sh._graph_live.copy()
+            ext = np.where(live, sh._graph_ext, -1).astype(np.int32)
+            seg = sh._delta.device_segment()
+        stacked["vectors"][i] = dg.vectors
+        stacked["nbr"][i] = dg.nbr
+        stacked["labels"][i] = dg.labels
+        stacked["live"][i] = live
+        stacked["ext"][i] = ext
+        stacked["dvec"][i] = seg.vectors
+        stacked["dlab"][i] = seg.labels
+        stacked["dids"][i] = seg.slot_ids
+        stacked["dext"][i] = seg.ext_ids
+        kx, ky = dg.U_X.shape[0], dg.U_Y.shape[0]
+        stacked["U_X"][i] = np.inf
+        stacked["U_X"][i, :kx] = dg.U_X.astype(np.float32)
+        stacked["U_Y"][i] = np.inf
+        stacked["U_Y"][i, :ky] = dg.U_Y.astype(np.float32)
+        stacked["num_y"][i] = ky
+        stacked["entry_node"][i] = -1
+        stacked["entry_node"][i, :kx] = dg.entry_node
+        stacked["entry_y_rank"][i] = np.iinfo(np.int32).max
+        stacked["entry_y_rank"][i, :kx] = dg.entry_y_rank
+
+
+def make_streaming_serving_step(
+    mesh,
+    *,
+    k: int = 10,
+    beam: int = 64,
+    max_iters: int | None = None,
+    use_ref_kernel: bool = True,
+):
+    """Jitted shard_map step for streaming serving: two-tier search per
+    shard (tombstone-masked graph beam + fused delta scan) then cross-shard
+    top-k merge. Results are *external* ids, so no round-robin inversion.
+
+    Signature of the returned fn (leading shard dim on database arrays):
+      (vectors, nbr, labels, live, ext, dvec, dlab, dids, dext,
+       U_X, U_Y, num_y, entry_node, entry_y_rank,
+       q, xq, yq, dstate) -> (ext_ids [B, k], dists [B, k])
+    """
+    from repro.stream.search import two_tier_merge
+
+    max_iters = max_iters if max_iters is not None else 2 * beam
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def shard_fn(vec, nbr, lab, live, ext, dvec, dlab, dids, dext,
+                 UX, UY, num_y, ent, enty, q, xq, yq, dstate):
+        vec, nbr, lab = vec[0], nbr[0], lab[0]
+        live, ext = live[0], ext[0]
+        dvec, dlab, dids, dext = dvec[0], dlab[0], dids[0], dext[0]
+        UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
+        states, ep = _canonicalize_local(UX, UY, num_y[0], ent, enty, xq, yq)
+        q32 = q.astype(jnp.float32)
+        ids_l, d_l = _batched_search_core(
+            vec, nbr, lab, q32, states, ep,
+            k=beam, beam=beam, max_iters=max_iters, use_ref=use_ref_kernel,
+        )
+        i_k, d_k = two_tier_merge(
+            ids_l, d_l, live, ext, q32, dvec, dlab, dids, dext, dstate,
+            k=k, use_ref=use_ref_kernel,
+        )
+        B = q.shape[0]
+        all_i = jax.lax.all_gather(i_k, "model", axis=1)    # [B, S, k]
+        all_d = jax.lax.all_gather(d_k, "model", axis=1)
+        cat_d = all_d.reshape(B, -1)
+        cat_i = all_i.reshape(B, -1)
+        nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+        return ni[:, :k], nd[:, :k]
+
+    shard_spec = P("model")
+    qspec = P(batch_axes)
+    in_specs = (shard_spec,) * 14 + (qspec,) * 4
+    fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
+    return jax.jit(fn)
+
+
+def serve_streaming_batch(
+    stacked: dict,
+    mesh,
+    relation: str,
+    q: np.ndarray,
+    s_q: np.ndarray,
+    t_q: np.ndarray,
+    *,
+    step=None,
+    k: int = 10,
+    beam: int = 64,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host entry point for the mesh streaming path. Pass a prebuilt ``step``
+    (from ``make_streaming_serving_step``) to reuse its compiled program
+    across epoch swaps."""
+    from repro.stream.delta import query_key_state
+
+    rel = get_relation(relation)
+    s_q = np.asarray(s_q, np.float64)
+    t_q = np.asarray(t_q, np.float64)
+    xq, yq = rel.query_map(s_q, t_q)
+    dstate = query_key_state(rel, s_q, t_q)
+    if step is None:
+        step = make_streaming_serving_step(mesh, k=k, beam=beam)
+    ids, d = step(
+        stacked["vectors"], stacked["nbr"], stacked["labels"],
+        stacked["live"], stacked["ext"],
+        stacked["dvec"], stacked["dlab"], stacked["dids"], stacked["dext"],
+        stacked["U_X"], stacked["U_Y"], stacked["num_y"],
+        stacked["entry_node"], stacked["entry_y_rank"],
+        np.asarray(q, np.float32),
+        np.asarray(xq, np.float32),
+        np.asarray(yq, np.float32),
+        dstate,
+    )
+    return np.asarray(ids), np.asarray(d)

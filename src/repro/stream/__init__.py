@@ -1,0 +1,24 @@
+"""Streaming index subsystem: LSM-style online inserts/deletes over the UDG.
+
+Two tiers — an immutable compacted UDG and a statically-padded mutable delta
+buffer — searched by one jitted step whose shapes never change across
+compaction epochs, so epoch swaps never recompile the serving program.
+"""
+from repro.stream.delta import DeltaBuffer, query_key_state, sort_key
+from repro.stream.index import (
+    CompactionPolicy,
+    CompactionReport,
+    StreamingIndex,
+)
+from repro.stream.search import streaming_search_cache_size, streaming_search_core
+
+__all__ = [
+    "CompactionPolicy",
+    "CompactionReport",
+    "DeltaBuffer",
+    "StreamingIndex",
+    "query_key_state",
+    "sort_key",
+    "streaming_search_cache_size",
+    "streaming_search_core",
+]

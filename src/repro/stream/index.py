@@ -1,0 +1,459 @@
+"""LSM-style streaming UDG: online inserts/deletes over an epoch-swapped
+compacted tier plus a mutable delta tier.
+
+Two tiers, one static serving shape:
+
+  compacted   an immutable UDG (``LabeledGraph`` built by ``build_udg``)
+              exported at fixed node/edge capacity, with a live mask for
+              tombstoned nodes (soft delete: dead nodes still route the
+              beam but never surface);
+  delta       an append-only ``DeltaBuffer`` at fixed capacity, scanned
+              brute-force through the fused Pallas kernel.
+
+Mutations are cheap O(1) host ops. When the mutable fraction (delta objects
++ graph tombstones) crosses the policy threshold, compaction rebuilds the
+UDG from (compacted ∪ delta − tombstones) and atomically swaps the epoch.
+The build can run on a background thread (``begin_compaction`` →
+``build_epoch`` → ``finish_compaction``); queries keep serving epoch N and
+mutations keep landing (inserts beyond the snapshot watermark stay in the
+delta, deletes are re-applied to epoch N+1 at swap), so nothing is lost and
+deleted objects can never resurface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import build_udg
+from repro.core.entry import EntryTable
+from repro.core.predicates import get_relation
+from repro.search.batched import prepare_states
+from repro.search.device_graph import DeviceGraph, export_device_graph
+from repro.stream.delta import DeltaBuffer, query_key_state
+from repro.stream.search import streaming_search_core
+
+
+@dataclasses.dataclass
+class CompactionPolicy:
+    """Rebuild when the mutable fraction crosses ``max_delta_fraction``.
+
+    mutable fraction = (live delta objects + graph tombstones) / live total;
+    ``min_mutations`` suppresses thrashing on tiny indexes.
+    """
+
+    max_delta_fraction: float = 0.25
+    min_mutations: int = 64
+
+    def should_compact(self, delta_live: int, graph_dead: int, total_live: int) -> bool:
+        mutable = delta_live + graph_dead
+        if mutable < self.min_mutations:
+            return False
+        return mutable > self.max_delta_fraction * max(total_live, 1)
+
+
+@dataclasses.dataclass
+class CompactionReport:
+    epoch: int
+    n_live: int
+    build_seconds: float
+    swap_seconds: float
+    delta_drained: int
+    tombstones_cleared: int
+
+
+@dataclasses.dataclass
+class _CompactionJob:
+    """Snapshot of the live set at ``begin_compaction`` time."""
+
+    vectors: np.ndarray
+    s: np.ndarray
+    t: np.ndarray
+    ext: np.ndarray
+    delta_watermark: int
+    delta_consumed: int
+    tombstones: int
+    graph: object = None          # LabeledGraph, filled by build_epoch
+    entry: object = None          # EntryTable
+    build_seconds: float = 0.0
+
+
+def _empty_device_graph(dim: int, node_capacity: int, edge_capacity: int,
+                        relation: str) -> DeviceGraph:
+    """Epoch-0 compacted tier: no nodes, no grids, every query falls through
+    to the delta scan (entry lookup yields ep = -1)."""
+    return DeviceGraph(
+        vectors=np.zeros((node_capacity, dim), dtype=np.float32),
+        nbr=np.full((node_capacity, edge_capacity), -1, dtype=np.int32),
+        labels=np.zeros((node_capacity, edge_capacity, 4), dtype=np.int32),
+        U_X=np.empty(0, dtype=np.float64),
+        U_Y=np.empty(0, dtype=np.float64),
+        entry_node=np.empty(0, dtype=np.int32),
+        entry_y_rank=np.empty(0, dtype=np.int32),
+        relation=relation,
+    )
+
+
+def _graph_states(dg: DeviceGraph, s_q: np.ndarray, t_q: np.ndarray):
+    """``prepare_states`` with an empty-grid guard (epoch 0)."""
+    if dg.U_X.shape[0] == 0 or dg.U_Y.shape[0] == 0:
+        B = np.asarray(s_q).shape[0]
+        return np.zeros((B, 2), np.int32), np.full(B, -1, np.int32)
+    return prepare_states(dg, s_q, t_q)
+
+
+class StreamingIndex:
+    """Online insert/delete/query over an epoch-swapped UDG + delta tier.
+
+    All shapes entering the jitted search step are fixed by
+    ``node_capacity`` / ``edge_capacity`` / ``delta_capacity`` at
+    construction, so epoch swaps reuse one compiled program.
+    """
+
+    def __init__(
+        self,
+        dim: int,
+        relation: str,
+        *,
+        node_capacity: int = 4096,
+        delta_capacity: int = 512,
+        edge_capacity: int = 128,
+        M: int = 16,
+        Z: int = 64,
+        K_p: int = 8,
+        policy: Optional[CompactionPolicy] = None,
+        build_kwargs: Optional[dict] = None,
+        id_start: int = 0,
+        id_stride: int = 1,
+    ):
+        self.dim = dim
+        self.relation = relation
+        self._rel = get_relation(relation)
+        self.node_capacity = node_capacity
+        self.delta_capacity = delta_capacity
+        self.edge_capacity = edge_capacity
+        self.policy = policy or CompactionPolicy()
+        self._build_kwargs = dict(M=M, Z=Z, K_p=K_p)
+        self._build_kwargs.update(build_kwargs or {})
+
+        self._lock = threading.RLock()
+        self._epoch = 0
+        self._dg = _empty_device_graph(dim, node_capacity, edge_capacity, relation)
+        # device-resident immutables of the current epoch
+        self._dev_vectors = jnp.asarray(self._dg.vectors)
+        self._dev_nbr = jnp.asarray(self._dg.nbr)
+        self._dev_labels = jnp.asarray(self._dg.labels)
+        self._graph_n = 0
+        self._graph_live = np.zeros(node_capacity, dtype=bool)
+        self._graph_ext = np.full(node_capacity, -1, dtype=np.int64)
+        self._graph_s = np.zeros(node_capacity, dtype=np.float64)
+        self._graph_t = np.zeros(node_capacity, dtype=np.float64)
+        self._delta = DeltaBuffer(dim, delta_capacity, self._rel)
+        # device snapshot of the mutable arrays (live/ext + delta segment),
+        # rebuilt lazily after a mutation so read-heavy serving re-uses one
+        # upload instead of re-transferring full-capacity buffers per batch
+        self._dev_mut: Optional[tuple] = None
+        self._ext2loc: Dict[int, Tuple[str, int]] = {}
+        # id namespace: shard s of S uses ids s, s+S, s+2S, ... so external
+        # ids stay globally unique across a sharded deployment.
+        self._next_id = id_start
+        self._id_stride = id_stride
+        self._job_active = False
+        self._pending_deletes: list[int] = []
+
+    # --- introspection --------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def live_count(self) -> int:
+        with self._lock:
+            return len(self._ext2loc)
+
+    @property
+    def graph_dead(self) -> int:
+        with self._lock:
+            return self._graph_n - int(
+                np.count_nonzero(self._graph_live[: self._graph_n])
+            )
+
+    @property
+    def delta_fraction(self) -> float:
+        with self._lock:
+            total = max(len(self._ext2loc), 1)
+            return (self._delta.live_count + self.graph_dead) / total
+
+    def live_ids(self) -> np.ndarray:
+        with self._lock:
+            return np.array(sorted(self._ext2loc), dtype=np.int64)
+
+    def snapshot_live(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(vectors, s, t, ext_ids) of the current live set — the oracle a
+        from-scratch rebuild would index."""
+        with self._lock:
+            gl = np.flatnonzero(self._graph_live[: self._graph_n])
+            dl = self._delta.live_slots()
+            vec = np.concatenate(
+                [self._dg.vectors[gl], self._delta.vectors[dl]], axis=0
+            )
+            s = np.concatenate([self._graph_s[gl], self._delta.s[dl]])
+            t = np.concatenate([self._graph_t[gl], self._delta.t[dl]])
+            ext = np.concatenate([self._graph_ext[gl], self._delta.ext_ids[dl]])
+            return vec, s, t, ext.astype(np.int64)
+
+    # --- mutations ------------------------------------------------------------
+
+    def insert(self, vec: np.ndarray, s: float, t: float) -> int:
+        """Insert one object; returns its external id. O(1) host work; may
+        trigger a synchronous flush-compaction when the delta is full."""
+        with self._lock:
+            if self._delta.full:
+                if self._job_active:
+                    raise RuntimeError(
+                        "delta buffer full while a compaction is in flight; "
+                        "increase delta_capacity or finish the compaction"
+                    )
+                self.compact()
+            ext = self._next_id
+            self._next_id += self._id_stride
+            slot = self._delta.append(vec, float(s), float(t), ext)
+            self._ext2loc[ext] = ("d", slot)
+            self._dev_mut = None
+            return ext
+
+    def insert_batch(self, vecs: np.ndarray, s: np.ndarray, t: np.ndarray) -> np.ndarray:
+        return np.array(
+            [self.insert(vecs[i], s[i], t[i]) for i in range(len(vecs))],
+            dtype=np.int64,
+        )
+
+    def delete(self, ext_id: int) -> bool:
+        """Tombstone one object. Returns False for unknown/already-deleted."""
+        with self._lock:
+            loc = self._ext2loc.pop(int(ext_id), None)
+            if loc is None:
+                return False
+            tier, i = loc
+            if tier == "g":
+                self._graph_live[i] = False
+            else:
+                self._delta.tombstone(i)
+            if self._job_active:
+                self._pending_deletes.append(int(ext_id))
+            self._dev_mut = None
+            return True
+
+    # --- compaction -----------------------------------------------------------
+
+    def should_compact(self) -> bool:
+        with self._lock:
+            return self.policy.should_compact(
+                self._delta.live_count, self.graph_dead, len(self._ext2loc)
+            )
+
+    def begin_compaction(self) -> _CompactionJob:
+        """Snapshot the live set. Mutations after this point keep landing in
+        the current epoch and are replayed onto the next at swap time."""
+        with self._lock:
+            if self._job_active:
+                raise RuntimeError("compaction already in flight")
+            watermark = self._delta.size
+            gl = np.flatnonzero(self._graph_live[: self._graph_n])
+            dl = self._delta.live_slots(upto=watermark)
+            job = _CompactionJob(
+                vectors=np.concatenate(
+                    [self._dg.vectors[gl], self._delta.vectors[dl]], axis=0
+                ),
+                s=np.concatenate([self._graph_s[gl], self._delta.s[dl]]),
+                t=np.concatenate([self._graph_t[gl], self._delta.t[dl]]),
+                ext=np.concatenate(
+                    [self._graph_ext[gl], self._delta.ext_ids[dl]]
+                ).astype(np.int64),
+                delta_watermark=watermark,
+                delta_consumed=int(dl.size),
+                tombstones=self.graph_dead,
+            )
+            self._job_active = True
+            self._pending_deletes = []
+            return job
+
+    def build_epoch(self, job: _CompactionJob) -> _CompactionJob:
+        """Rebuild the UDG on the snapshot. Lock-free: safe on a background
+        thread while the current epoch keeps serving."""
+        n_live = job.vectors.shape[0]
+        if n_live > self.node_capacity:
+            raise RuntimeError(
+                f"live set {n_live} exceeds node_capacity {self.node_capacity}"
+            )
+        t0 = time.perf_counter()
+        if n_live > 0:
+            g, _ = build_udg(
+                job.vectors, job.s, job.t, self.relation, **self._build_kwargs
+            )
+            job.graph = g
+            job.entry = EntryTable(g)
+        job.build_seconds = time.perf_counter() - t0
+        return job
+
+    def finish_compaction(self, job: _CompactionJob) -> CompactionReport:
+        """Atomically swap in epoch N+1 (the only step that blocks queries)."""
+        with self._lock:
+            t0 = time.perf_counter()
+            n_new = job.vectors.shape[0]
+            if job.graph is not None:
+                dg = export_device_graph(
+                    job.graph,
+                    job.entry,
+                    node_capacity=self.node_capacity,
+                    edge_capacity=self.edge_capacity,
+                )
+            else:
+                dg = _empty_device_graph(
+                    self.dim, self.node_capacity, self.edge_capacity, self.relation
+                )
+            graph_live = np.zeros(self.node_capacity, dtype=bool)
+            graph_live[:n_new] = True
+            graph_ext = np.full(self.node_capacity, -1, dtype=np.int64)
+            graph_ext[:n_new] = job.ext
+            graph_s = np.zeros(self.node_capacity, dtype=np.float64)
+            graph_t = np.zeros(self.node_capacity, dtype=np.float64)
+            graph_s[:n_new] = job.s
+            graph_t[:n_new] = job.t
+
+            # fresh delta: replay post-watermark live inserts
+            old = self._delta
+            delta = DeltaBuffer(self.dim, self.delta_capacity, self._rel)
+            ext2loc: Dict[int, Tuple[str, int]] = {
+                int(e): ("g", i) for i, e in enumerate(job.ext)
+            }
+            for slot in old.live_slots():
+                if slot < job.delta_watermark:
+                    continue
+                ns = delta.append(
+                    old.vectors[slot], old.s[slot], old.t[slot],
+                    int(old.ext_ids[slot]),
+                )
+                ext2loc[int(old.ext_ids[slot])] = ("d", ns)
+            # replay deletes that raced the build
+            for ext in self._pending_deletes:
+                loc = ext2loc.pop(ext, None)
+                if loc is None:
+                    continue
+                tier, i = loc
+                if tier == "g":
+                    graph_live[i] = False
+                else:
+                    delta.tombstone(i)
+
+            self._dg = dg
+            self._dev_vectors = jnp.asarray(dg.vectors)
+            self._dev_nbr = jnp.asarray(dg.nbr)
+            self._dev_labels = jnp.asarray(dg.labels)
+            self._graph_n = n_new
+            self._graph_live = graph_live
+            self._graph_ext = graph_ext
+            self._graph_s = graph_s
+            self._graph_t = graph_t
+            self._delta = delta
+            self._ext2loc = ext2loc
+            self._dev_mut = None
+            self._epoch += 1
+            self._job_active = False
+            self._pending_deletes = []
+            return CompactionReport(
+                epoch=self._epoch,
+                n_live=len(ext2loc),
+                build_seconds=job.build_seconds,
+                swap_seconds=time.perf_counter() - t0,
+                delta_drained=job.delta_consumed,
+                tombstones_cleared=job.tombstones,
+            )
+
+    def abort_compaction(self) -> None:
+        """Abandon an in-flight compaction job (e.g. after a build failure);
+        the current epoch stays live and mutations proceed normally."""
+        with self._lock:
+            self._job_active = False
+            self._pending_deletes = []
+
+    def compact(self) -> CompactionReport:
+        """Synchronous compaction: snapshot, rebuild, swap."""
+        job = self.begin_compaction()
+        try:
+            self.build_epoch(job)
+        except BaseException:
+            self.abort_compaction()
+            raise
+        return self.finish_compaction(job)
+
+    def maybe_compact(self) -> Optional[CompactionReport]:
+        if self.should_compact() and not self._job_active:
+            return self.compact()
+        return None
+
+    # --- queries ----------------------------------------------------------------
+
+    def search(
+        self,
+        q: np.ndarray,
+        s_q,
+        t_q,
+        *,
+        k: int = 10,
+        beam: int = 64,
+        max_iters: Optional[int] = None,
+        use_ref: bool = True,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Two-tier search; returns (external ids [B, k], sq dists [B, k]),
+        -1 padded. A 1-D query vector is treated as a batch of one."""
+        q = np.asarray(q, dtype=np.float32)
+        single = q.ndim == 1
+        if single:
+            q = q[None]
+            s_q = np.asarray([s_q], dtype=np.float64)
+            t_q = np.asarray([t_q], dtype=np.float64)
+        else:
+            s_q = np.asarray(s_q, dtype=np.float64)
+            t_q = np.asarray(t_q, dtype=np.float64)
+        if k > beam:
+            raise ValueError(f"k={k} > beam={beam}")
+
+        with self._lock:
+            # consistent snapshot of one epoch: device immutables are swapped
+            # as a unit; mutable masks/delta are uploaded once per mutation
+            # (the cache is invalidated by insert/delete/epoch swap) so
+            # read-heavy serving doesn't re-transfer full-capacity buffers.
+            dg = self._dg
+            dev = (self._dev_vectors, self._dev_nbr, self._dev_labels)
+            if self._dev_mut is None:
+                live = self._graph_live.copy()
+                ext = np.where(live, self._graph_ext, -1).astype(np.int32)
+                seg = self._delta.device_segment()
+                self._dev_mut = (
+                    jnp.asarray(live), jnp.asarray(ext),
+                    jnp.asarray(seg.vectors), jnp.asarray(seg.labels),
+                    jnp.asarray(seg.slot_ids), jnp.asarray(seg.ext_ids),
+                )
+            mut = self._dev_mut
+
+        states, ep = _graph_states(dg, s_q, t_q)
+        dstate = query_key_state(self._rel, s_q, t_q)
+        ids, d = streaming_search_core(
+            dev[0], dev[1], dev[2], *mut,
+            jnp.asarray(q), jnp.asarray(states), jnp.asarray(ep),
+            jnp.asarray(dstate),
+            k=k, beam=beam,
+            max_iters=max_iters if max_iters is not None else 2 * beam,
+            use_ref=use_ref,
+        )
+        ids = np.asarray(ids)
+        d = np.asarray(d)
+        if single:
+            return ids[0], d[0]
+        return ids, d

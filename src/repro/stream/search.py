@@ -1,0 +1,105 @@
+"""Fused two-tier streaming search (jit-able, one static shape per epoch).
+
+One jitted step searches both tiers and merges:
+
+  graph tier   lockstep beam search over the compacted UDG
+               (``_batched_search_core`` asked for the full beam), then
+               tombstone-masked — deleted nodes still *route* (soft delete,
+               as in FreshDiskANN) but never surface in results;
+  delta tier   masked brute-force scan of the statically-padded delta
+               segment through the same fused Pallas ``filter_dist`` kernel
+               (label rectangles in monotone float-key space);
+  merge        single ascending sort over the concatenated candidate lists,
+               keep the best k, reporting *external* ids.
+
+Every array argument has a capacity-fixed shape, so epoch swaps (compaction
+publishing a new graph tier + drained delta) hit the same jit cache entry —
+no recompilation while serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.search.batched import _batched_search_core
+
+
+def two_tier_merge(
+    ids_g: jnp.ndarray,        # [B, L] graph-tier beam ids (node space)
+    d_g: jnp.ndarray,          # [B, L] graph-tier distances
+    live: jnp.ndarray,         # [N] bool
+    ext_ids: jnp.ndarray,      # [N] int32
+    q: jnp.ndarray,            # [B, d] f32
+    dvec: jnp.ndarray,         # [C, d] delta tier
+    dlab: jnp.ndarray,         # [C, 4] int32
+    dids: jnp.ndarray,         # [C] int32
+    dext: jnp.ndarray,         # [C] int32
+    dstate: jnp.ndarray,       # [B, 2] int32
+    *,
+    k: int,
+    use_ref: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Tombstone-mask the graph beam, scan the delta tier through the fused
+    kernel, and merge to the best k external ids. Shared by the single-host
+    streaming step and the per-shard body of the mesh serving step."""
+    n = live.shape[0]
+    B, d = q.shape
+    C = dvec.shape[0]
+    safe = jnp.clip(ids_g, 0, n - 1)
+    ok = (ids_g >= 0) & live[safe]
+    d_g = jnp.where(ok, d_g, jnp.inf)
+    eid_g = jnp.where(ok, ext_ids[safe], -1)
+
+    cand = jnp.broadcast_to(dvec[None], (B, C, d))
+    lab = jnp.broadcast_to(dlab[None], (B, C, 4))
+    slot = jnp.broadcast_to(dids[None], (B, C))
+    d_d = ops.filter_dist(q, cand, lab, dstate, slot, use_ref=use_ref)
+    eid_d = jnp.where(jnp.isfinite(d_d), dext[None], -1)
+
+    all_d = jnp.concatenate([d_g, d_d], axis=1)
+    all_e = jnp.concatenate([eid_g, eid_d], axis=1)
+    sd, se = jax.lax.sort((all_d, all_e), dimension=1, num_keys=1)
+    return se[:, :k], sd[:, :k]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "beam", "max_iters", "use_ref")
+)
+def streaming_search_core(
+    vectors: jnp.ndarray,      # [N, d]  compacted tier (capacity-padded)
+    nbr: jnp.ndarray,          # [N, E] int32
+    labels: jnp.ndarray,       # [N, E, 4] int32
+    live: jnp.ndarray,         # [N] bool   (False = tombstoned or padding)
+    ext_ids: jnp.ndarray,      # [N] int32  external id per node (-1 padding)
+    dvec: jnp.ndarray,         # [C, d]  delta tier
+    dlab: jnp.ndarray,         # [C, 4] int32 key-space rectangles
+    dids: jnp.ndarray,         # [C] int32 slot ids (-1 = dead)
+    dext: jnp.ndarray,         # [C] int32 external ids (-1 = dead)
+    q: jnp.ndarray,            # [B, d]
+    states: jnp.ndarray,       # [B, 2] int32 canonical rank state (graph tier)
+    ep: jnp.ndarray,           # [B] int32 entry nodes (-1 = empty valid set)
+    dstate: jnp.ndarray,       # [B, 2] int32 float-key state (delta tier)
+    *,
+    k: int,
+    beam: int,
+    max_iters: int,
+    use_ref: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    q = q.astype(jnp.float32)
+    ids_g, d_g = _batched_search_core(
+        vectors, nbr, labels, q, states, ep,
+        k=beam, beam=beam, max_iters=max_iters, use_ref=use_ref,
+    )
+    return two_tier_merge(
+        ids_g, d_g, live, ext_ids, q, dvec, dlab, dids, dext, dstate,
+        k=k, use_ref=use_ref,
+    )
+
+
+def streaming_search_cache_size() -> int:
+    """Number of compiled variants of the streaming step (epoch-swap check)."""
+    return streaming_search_core._cache_size()

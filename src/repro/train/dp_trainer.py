@@ -56,12 +56,13 @@ def make_dp_train_step(
         }
         return out, metrics
 
-    sm = jax.shard_map(
+    from repro.distributed.compat import shard_map as _shard_map
+
+    sm = _shard_map(
         step_fn,
-        mesh=mesh,
-        in_specs=(P(), {"tokens": P("data"), "labels": P("data")}),
-        out_specs=(P(), P()),
-        check_vma=False,
+        mesh,
+        (P(), {"tokens": P("data"), "labels": P("data")}),
+        (P(), P()),
     )
     jitted = jax.jit(sm, donate_argnums=(0,))
 

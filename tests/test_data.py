@@ -1,6 +1,8 @@
 """Data pipeline: interval distributions, selectivity control, ground truth."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (

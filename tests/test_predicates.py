@@ -1,6 +1,7 @@
 """Table II semantic mappings + Lemma 1 canonicalization (property tests)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.predicates import (

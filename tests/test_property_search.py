@@ -4,6 +4,9 @@ batched device search must (a) return only predicate-valid objects, and
 (b) agree with brute force on the nearest valid object whenever the beam
 covers the valid set."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EntryTable, build_udg, get_relation, search_query

@@ -15,12 +15,13 @@ from repro.distributed.sharding import (
     opt_state_specs,
     param_specs,
 )
+from repro.distributed.compat import abstract_mesh
 from repro.models import init_decode_state, init_params_shapes
 from repro.train import adamw
 
 MESHES = [
-    jax.sharding.AbstractMesh((16, 16), ("data", "model")),
-    jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    abstract_mesh({"data": 16, "model": 16}),
+    abstract_mesh({"pod": 2, "data": 16, "model": 16}),
 ]
 
 
