@@ -1,44 +1,191 @@
-"""Batched device search vs per-query host search (this framework's
-TPU-serving contribution): throughput of the jitted lockstep beam search."""
+"""Batched device search: gather-fused vs unfused beam expansion.
+
+Measures the jitted lockstep beam search in both loop structures —
+
+  unfused   XLA gathers a [B, E, D] candidate tensor per iteration, dense
+            [B, n] bool visited, per-iteration norm recompute;
+  fused     gather-fused Pallas kernel (in-kernel HBM row DMA, cached
+            norms, bit-packed visited), optionally expanding the best M
+            beam entries per iteration —
+
+and emits both the usual CSV lines and a machine-readable
+``BENCH_search.json`` at the repo root: QPS, p50/p99 batch latency,
+recall@10, XLA-visible bytes moved per search iteration (HLO cost-analysis
+delta between 1- and 2-iteration unrolled probes), an analytic per-iteration
+HBM gather-traffic model, and a jaxpr check that the fused path really has
+no ``[B, M*E, D]`` intermediate.
+
+On this CPU container wall-clock timing uses the jnp oracles
+(``use_ref=True`` — interpret-mode Pallas is a Python emulation, not a perf
+signal); the bytes/jaxpr probes inspect the compiled Pallas variants, where
+the fused/unfused distinction is structural, not backend-dependent.
+
+``--tiny`` (or ``main(tiny=True)``) shrinks everything for the CI smoke run.
+"""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
+import jax
 import numpy as np
 
 from benchmarks.common import dataset, emit, get_method, queries
 from repro.core import EntryTable
-from repro.search import batched_udg_search, export_device_graph
+from repro.data import recall_at_k
+from repro.search import batched_udg_search, export_device_graph, prepare_states
+from repro.search.batched import _batched_search_core
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_search.json"
 
 
-def main() -> None:
-    vecs, s, t = dataset()
-    m = get_method("udg", "containment", M=16, Z=64, K_p=8)
-    dg = export_device_graph(m.g, EntryTable(m.g))
-    for sigma in (0.01, 0.1):
-        qs = queries(vecs, s, t, "containment", sigma)
-        # warm up (compile)
-        batched_udg_search(dg, qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
-                           use_ref=True)
-        t0 = time.perf_counter()
-        iters = 3
-        for _ in range(iters):
-            ids, _ = batched_udg_search(dg, qs.vectors, qs.s_q, qs.t_q,
-                                        k=10, beam=64, use_ref=True)
-        us = (time.perf_counter() - t0) / (iters * qs.nq) * 1e6
-        from repro.data import recall_at_k
-        rec = recall_at_k(ids, qs)
-        # host reference path
-        t0 = time.perf_counter()
-        for i in range(qs.nq):
-            m.search(qs.vectors[i], qs.s_q[i], qs.t_q[i], 10, 64)
-        host_us = (time.perf_counter() - t0) / qs.nq * 1e6
-        emit(
-            f"batched.containment.sel{sigma}", us,
-            recall=round(rec, 4), host_us=round(host_us, 1),
-            batch=qs.nq, beam=64,
+def _core_args(dg, qs):
+    import jax.numpy as jnp
+
+    states, ep = prepare_states(dg, qs.s_q, qs.t_q)
+    return (
+        jnp.asarray(dg.vectors), jnp.asarray(dg.nbr), jnp.asarray(dg.labels),
+        jnp.asarray(np.asarray(qs.vectors, np.float32)),
+        jnp.asarray(states), jnp.asarray(ep),
+    )
+
+
+def _cost_bytes(args, norms, *, fused, expand, beam, unroll):
+    """XLA-visible 'bytes accessed' of an ``unroll``-iteration probe."""
+    lowered = _batched_search_core.lower(
+        *args, k=10, beam=beam, max_iters=2 * beam, use_ref=False,
+        fused=fused, expand=expand, unroll_iters=unroll,
+        norms=norms if fused else None,
+    )
+    cost = lowered.compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return float(dict(cost or {}).get("bytes accessed", 0.0))
+
+
+def _gather_shape_in_jaxpr(args, norms, *, fused, expand, beam):
+    """True iff a [B, M*E, D]-shaped f32 intermediate appears in the jaxpr."""
+    B, D = args[3].shape
+    E = args[1].shape[1]
+    jaxpr = jax.make_jaxpr(
+        lambda *a: _batched_search_core(
+            *a, k=10, beam=beam, max_iters=2 * beam, use_ref=False,
+            fused=fused, expand=expand, unroll_iters=1,
+            norms=norms if fused else None,
         )
+    )(*args)
+    return f"f32[{B},{expand * E},{D}]" in str(jaxpr)
+
+
+def _timed(dg, qs, *, beam, repeats, **kw):
+    """(recall@10, qps, p50_ms, p99_ms) of the jitted end-to-end search."""
+    run = lambda: batched_udg_search(
+        dg, qs.vectors, qs.s_q, qs.t_q, k=10, beam=beam, use_ref=True, **kw
+    )
+    ids, _ = run()  # warm up (compile)
+    lat = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run()
+        lat.append(time.perf_counter() - t0)
+    lat = np.array(lat)
+    return (
+        float(recall_at_k(ids, qs)),
+        float(qs.nq / lat.mean()),
+        float(np.percentile(lat, 50) * 1e3),
+        float(np.percentile(lat, 99) * 1e3),
+    )
+
+
+def main(tiny: bool = False) -> None:
+    if tiny:
+        n, dim, nq, beam, repeats = 600, 16, 16, 32, 3
+    else:
+        n, dim, nq, beam, repeats = None, None, None, 64, 5
+    if tiny:
+        vecs, s, t = dataset("uniform", n, dim)
+        m = get_method("udg", "containment", data_key=("uniform", n, dim, 0),
+                       M=8, Z=32, K_p=4)
+    else:
+        vecs, s, t = dataset()
+        m = get_method("udg", "containment", M=16, Z=64, K_p=8)
+    dg = export_device_graph(m.g, EntryTable(m.g))
+    import jax.numpy as jnp
+
+    norms = jnp.asarray(dg.norms)
+
+    record = {
+        "bench": "batched_search",
+        "n": dg.n, "dim": dg.vectors.shape[1], "E": dg.max_degree,
+        "beam": beam, "tiny": tiny,
+        "configs": {},
+    }
+    B, E, D = None, dg.max_degree, dg.vectors.shape[1]
+    configs = [
+        ("unfused", dict(fused=False, expand=1)),
+        ("fused", dict(fused=True, expand=1)),
+        ("fused_x4", dict(fused=True, expand=4)),
+    ]
+    for sigma in (0.01, 0.1) if not tiny else (0.1,):
+        qs = queries(vecs, s, t, "containment", sigma,
+                     nq=nq if tiny else 32)
+        args = _core_args(dg, qs)
+        B = qs.nq
+        for name, kw in configs:
+            rec, qps, p50, p99 = _timed(dg, qs, beam=beam, repeats=repeats, **kw)
+            # per-iteration XLA-visible traffic: 2-iter minus 1-iter probe
+            b1 = _cost_bytes(args, norms, beam=beam, unroll=1, **kw)
+            b2 = _cost_bytes(args, norms, beam=beam, unroll=2, **kw)
+            per_iter = b2 - b1
+            has_bed = _gather_shape_in_jaxpr(args, norms, beam=beam, **kw)
+            M = kw["expand"]
+            # analytic HBM gather traffic per iteration, per query:
+            #   unfused: E rows out to HBM as [B,E,D] + read back by the
+            #            kernel (+ dense visited row round-trip)
+            #   fused:   M*E rows read once by the in-kernel DMA + 12 B of
+            #            metadata (norm + visited word + scale) per candidate
+            row = D * 4
+            analytic = (
+                B * M * E * (row + 12) if kw["fused"]
+                else B * E * (2 * row) + 2 * B * dg.n
+            )
+            key = f"sel{sigma}.{name}"
+            record["configs"][key] = {
+                "fused": kw["fused"], "expand": M, "batch": B,
+                "recall_at_10": round(rec, 4),
+                "qps": round(qps, 2),
+                "p50_ms": round(p50, 3), "p99_ms": round(p99, 3),
+                "xla_bytes_per_iter": per_iter,
+                "analytic_gather_bytes_per_iter": analytic,
+                "bed_intermediate_in_jaxpr": has_bed,
+            }
+            emit(
+                f"batched.containment.sel{sigma}.{name}",
+                1e6 / qps, recall=round(rec, 4), qps=round(qps, 1),
+                p99_ms=round(p99, 2), iter_bytes=int(per_iter),
+            )
+        un = record["configs"][f"sel{sigma}.unfused"]
+        fu = record["configs"][f"sel{sigma}.fused"]
+        record["configs"][f"sel{sigma}.summary"] = {
+            "qps_speedup_fused_vs_unfused": round(
+                fu["qps"] / max(un["qps"], 1e-9), 3),
+            "xla_bytes_reduction_per_iter": round(
+                1.0 - fu["xla_bytes_per_iter"] / max(un["xla_bytes_per_iter"], 1e-9), 4),
+        }
+    # structural acceptance: the fused jaxpr must not materialize [B, M*E, D]
+    assert not any(
+        c.get("bed_intermediate_in_jaxpr") for k, c in record["configs"].items()
+        if c.get("fused")
+    ), "fused path materialized a [B, M*E, D] intermediate"
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke scale (small corpus, one selectivity)")
+    main(tiny=ap.parse_args().tiny)

@@ -1,13 +1,29 @@
 """Pallas TPU kernels for the distance hot-spots of UDG search.
 
-  l2dist       tiled batched squared-L2 (MXU cross-term, VMEM tiles)
-  filter_dist  fused edge-label validity + distance (Alg. 2 inner loop)
-  int8dist     squared-L2 against int8-quantized vectors (beyond-paper
-               HBM-bandwidth optimization)
+  l2dist              tiled batched squared-L2 (MXU cross-term, VMEM tiles)
+  filter_dist         fused edge-label validity + distance over pre-gathered
+                      candidates (Alg. 2 inner loop, baseline form)
+  filter_dist_gather  gather-fused serving hot path: in-kernel HBM row DMA
+                      (scalar-prefetched ids), cached-norm distance, and
+                      bit-packed visited test — no [B, E, D] intermediate
+  int8dist            squared-L2 against int8-quantized vectors (beyond-paper
+                      HBM-bandwidth optimization)
 
 Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
 jit'd public wrappers (interpret=True on CPU).
 """
-from repro.kernels.ops import filter_dist, int8_l2dist, l2dist, quantize_int8
+from repro.kernels.ops import (
+    filter_dist,
+    filter_dist_gather,
+    int8_l2dist,
+    l2dist,
+    quantize_int8,
+)
 
-__all__ = ["filter_dist", "int8_l2dist", "l2dist", "quantize_int8"]
+__all__ = [
+    "filter_dist",
+    "filter_dist_gather",
+    "int8_l2dist",
+    "l2dist",
+    "quantize_int8",
+]

@@ -1,19 +1,36 @@
-"""Pallas TPU kernel: fused edge-label validity test + squared distance.
+"""Pallas TPU kernels: fused edge-label validity test + squared distance.
 
-This is the inner loop of UDGSearch (paper Alg. 2 lines 8-9) adapted to the
-TPU execution model: instead of branching per edge (cheap on CPU, poison on
-the VPU), the label-containment test becomes a predication mask fused into
-the distance computation — invalid neighbors come back with +inf distance
-and are annihilated by the subsequent top-k. Fusing the two passes means the
-gathered candidate tile is read from VMEM exactly once.
+Two variants share the label-test semantics (paper Alg. 2 lines 8-9, turned
+from a per-edge branch into a predication mask so invalid neighbors come
+back +inf and are annihilated by the subsequent top-k):
 
-Block layout: grid (B, E/TE). Per step the kernel sees one query row
-(1, D), a (TE, D) candidate tile, the (TE, 4) int32 label rectangles, the
-(1, 2) int32 canonical state, and the (TE,) candidate ids (for padding).
-The cross term q.cT is a (TE, D) x (D, 1) MXU matvec.
+``filter_dist_pallas`` — the original *pre-gathered* form. The caller hands
+the kernel a dense ``[B, E, D]`` candidate tensor that XLA gathered into HBM
+beforehand. Block layout: grid ``(B, E/TE)``; per step one ``(1, D)`` query
+row, a ``(TE, D)`` candidate tile, ``(TE, 4)`` label rectangles, the
+``(1, 2)`` state and the ``(TE,)`` ids. Kept as the simple baseline (delta
+scans with pre-broadcast candidates, parity tests).
 
-VMEM at defaults (TE=128, D<=2048 f32): 1 MiB candidates + 8 KiB query —
-comfortably double-buffered.
+``filter_dist_gather_pallas`` — the *gather-fused* serving hot path. The
+kernel receives the full HBM-resident vector table (``memory_space=ANY``,
+never blocked into VMEM) plus scalar-prefetched candidate row ids
+(``PrefetchScalarGridSpec``), and DMAs exactly the ``TE`` needed rows per
+tile into a double-buffered VMEM scratch — tile ``j+1``'s row fetches are
+issued before tile ``j``'s compute, so the gather overlaps the MXU matvec.
+The dense ``[B, E, D]`` intermediate never exists. Squared distance uses
+cached per-row norms (``‖c‖² − 2·q·c + ‖q‖²``; the ``‖c‖²`` vector is
+precomputed once at graph export, so per-candidate traffic beyond the row
+itself is 12 bytes: norm + visited word + label offset). The visited test
+reads a bit-packed ``[B, ceil(n/32)]`` uint32 bitmap: per candidate the
+32-bit word (gathered alongside the norm) is shifted by ``id & 31`` inside
+the kernel, so visited suppression costs one VPU shift instead of a dense
+``[B, n]`` bool round-trip. int8 tables are dequantized in VMEM right after
+the DMA via per-candidate scales.
+
+VMEM at defaults (TE=128, D<=2048 f32): 2 x 1 MiB double-buffered candidate
+scratch + 8 KiB query + ~7 KiB of per-candidate metadata tiles — well under
+the ~16 MiB budget, with headroom for the pipeline's own double-buffering
+of the blocked operands.
 """
 from __future__ import annotations
 
@@ -22,6 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 TE = 128  # candidate-tile rows
 
@@ -84,3 +102,139 @@ def filter_dist_pallas(
         interpret=interpret,
     )(q, cand, labels, state, cand_ids)
     return out[:, :e]
+
+
+def _gather_kernel_body(
+    sids_ref,    # scalar prefetch: [B, Cp] int32 safe (clipped) row ids
+    table_ref,   # [n, D] HBM (ANY) — full vector table, never blocked
+    q_ref,       # (1, D)
+    lab_ref,     # (1, TE, 4) int32
+    state_ref,   # (1, 2) int32
+    ids_ref,     # (1, TE) int32 raw ids (-1 = padding/inactive)
+    norm_ref,    # (1, TE) f32 cached ‖c‖² per candidate
+    word_ref,    # (1, TE) uint32 visited word per candidate
+    scale_ref,   # (1, TE) f32 dequant scale per candidate (1.0 for f32)
+    out_ref,     # (1, TE) f32
+    vec_scratch,  # VMEM (2, TE, D) table.dtype — double-buffered row tiles
+    sem,          # DMA (2, TE)
+    *,
+    te: int,
+    tiles: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    pos = i * tiles + j          # flat tile index in grid iteration order
+    slot = jax.lax.rem(pos, 2)
+    nslot = jax.lax.rem(pos + 1, 2)
+    total = pl.num_programs(0) * tiles
+
+    def row_dma(p, s, r):
+        """DMA descriptor for row r of flat tile p into scratch slot s."""
+        ti = p // tiles
+        tj = jax.lax.rem(p, tiles)
+        idx = sids_ref[ti, tj * te + r]
+        return pltpu.make_async_copy(
+            table_ref.at[idx], vec_scratch.at[s, r], sem.at[s, r]
+        )
+
+    @pl.when(pos == 0)
+    def _warmup():          # first tile has no predecessor to prefetch it
+        def go(r, _):
+            row_dma(0, 0, r).start()
+            return 0
+        jax.lax.fori_loop(0, te, go, 0)
+
+    @pl.when(pos + 1 < total)
+    def _prefetch():        # issue tile j+1's fetches before tile j's compute
+        def go(r, _):
+            row_dma(pos + 1, nslot, r).start()
+            return 0
+        jax.lax.fori_loop(0, te, go, 0)
+
+    def wait(r, _):
+        row_dma(pos, slot, r).wait()
+        return 0
+    jax.lax.fori_loop(0, te, wait, 0)
+
+    q = q_ref[0].astype(jnp.float32)                  # [D]
+    cand = vec_scratch[slot].astype(jnp.float32)      # [TE, D]
+    lab = lab_ref[0]
+    a = state_ref[0, 0]
+    c = state_ref[0, 1]
+    ids = ids_ref[0]
+    scale = scale_ref[0]
+
+    cross = jax.lax.dot_general(
+        cand, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0] * scale                                   # dequant after the MXU
+    qs = jnp.sum(q * q)
+    dist = norm_ref[0] - 2.0 * cross + qs
+
+    shift = (jnp.maximum(ids, 0) & 31).astype(jnp.uint32)
+    seen = (jax.lax.shift_right_logical(word_ref[0], shift)
+            & jnp.uint32(1)) == jnp.uint32(1)
+    ok = (
+        (lab[:, 0] <= a) & (a <= lab[:, 1])
+        & (lab[:, 2] <= c) & (c <= lab[:, 3])
+        & (ids >= 0)
+        & ~seen
+    )
+    out_ref[0, :] = jnp.where(ok, dist, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "te"))
+def filter_dist_gather_pallas(
+    table: jnp.ndarray,      # [n, D] f32/bf16/int8 — full HBM table
+    q: jnp.ndarray,          # [B, D]
+    cand_ids: jnp.ndarray,   # [B, C] int32, -1 = padding/inactive
+    labels: jnp.ndarray,     # [B, C, 4] int32
+    state: jnp.ndarray,      # [B, 2] int32
+    norms: jnp.ndarray,      # [B, C] f32 gathered ‖c‖² (dequantized scale)
+    words: jnp.ndarray,      # [B, C] uint32 gathered visited bitmap words
+    scales: jnp.ndarray,     # [B, C] f32 gathered dequant scales
+    *,
+    interpret: bool = False,
+    te: int = TE,
+) -> jnp.ndarray:
+    b, c = cand_ids.shape
+    n, d = table.shape
+    te = min(te, max(8, -(-c // 8) * 8))    # small fan-outs: shrink the tile
+    pc = (-c) % te
+    if pc:
+        cand_ids = jnp.pad(cand_ids, ((0, 0), (0, pc)), constant_values=-1)
+        labels = jnp.pad(labels, ((0, 0), (0, pc), (0, 0)))
+        norms = jnp.pad(norms, ((0, 0), (0, pc)))
+        words = jnp.pad(words, ((0, 0), (0, pc)))
+        scales = jnp.pad(scales, ((0, 0), (0, pc)), constant_values=1.0)
+    cp = cand_ids.shape[1]
+    tiles = cp // te
+    safe_ids = jnp.clip(cand_ids, 0, n - 1)   # DMA source rows (pad -> row 0)
+    grid = (b, tiles)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),               # table (HBM)
+            pl.BlockSpec((1, d), lambda i, j, s: (i, 0)),       # q
+            pl.BlockSpec((1, te, 4), lambda i, j, s: (i, j, 0)),  # labels
+            pl.BlockSpec((1, 2), lambda i, j, s: (i, 0)),       # state
+            pl.BlockSpec((1, te), lambda i, j, s: (i, j)),      # raw ids
+            pl.BlockSpec((1, te), lambda i, j, s: (i, j)),      # norms
+            pl.BlockSpec((1, te), lambda i, j, s: (i, j)),      # visited words
+            pl.BlockSpec((1, te), lambda i, j, s: (i, j)),      # scales
+        ],
+        out_specs=pl.BlockSpec((1, te), lambda i, j, s: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((2, te, d), table.dtype),
+            pltpu.SemaphoreType.DMA((2, te)),
+        ],
+    )
+    kernel = functools.partial(_gather_kernel_body, te=te, tiles=tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, cp), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, table, q, labels, state, cand_ids, norms, words, scales)
+    return out[:, :c]

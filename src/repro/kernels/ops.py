@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.filter_dist import filter_dist_pallas
+from repro.kernels.filter_dist import filter_dist_gather_pallas, filter_dist_pallas
 from repro.kernels.int8dist import int8_l2dist_pallas, quantize_int8
 from repro.kernels.l2dist import l2dist_pallas
 
@@ -43,6 +43,43 @@ def filter_dist(
     return filter_dist_pallas(q, cand, labels, state, cand_ids, interpret=_on_cpu())
 
 
+def filter_dist_gather(
+    table: jnp.ndarray,      # [n, D] full vector table (f32 or int8)
+    norms: jnp.ndarray,      # [n] f32 cached ‖c‖² of the (dequantized) rows
+    q: jnp.ndarray,          # [B, D]
+    cand_ids: jnp.ndarray,   # [B, C] int32 candidate row ids (-1 = padding)
+    labels: jnp.ndarray,     # [B, C, 4] int32
+    state: jnp.ndarray,      # [B, 2] int32
+    visited: jnp.ndarray,    # [B, ceil(n/32)] uint32 bit-packed visited set
+    *,
+    scales: jnp.ndarray | None = None,   # [n] f32 int8 dequant scales
+    use_ref: bool = False,
+) -> jnp.ndarray:
+    """Gather-fused label-validity + visited test + squared distance [B, C].
+
+    The candidate *vector rows* are gathered inside the Pallas kernel (HBM →
+    VMEM DMA driven by scalar-prefetched ids) — no [B, C, D] intermediate.
+    Only the 4-byte per-candidate metadata (cached norm, visited word,
+    dequant scale) is gathered here on the XLA side before the call.
+    """
+    if use_ref:
+        return ref.filter_dist_gather_ref(
+            table, norms, q, cand_ids, labels, state, visited, scales
+        )
+    n = table.shape[0]
+    safe = jnp.clip(cand_ids, 0, n - 1)
+    g_norms = norms[safe].astype(jnp.float32)
+    g_words = jnp.take_along_axis(visited, safe >> 5, axis=1)
+    if scales is not None:
+        g_scales = scales[safe].astype(jnp.float32)
+    else:
+        g_scales = jnp.ones_like(g_norms)
+    return filter_dist_gather_pallas(
+        table, q, cand_ids, labels, state, g_norms, g_words, g_scales,
+        interpret=_on_cpu(),
+    )
+
+
 def int8_l2dist(
     q: jnp.ndarray, c_q: jnp.ndarray, c_scale: jnp.ndarray, *, use_ref: bool = False
 ) -> jnp.ndarray:
@@ -52,4 +89,10 @@ def int8_l2dist(
     return int8_l2dist_pallas(q, c_q, c_scale, interpret=_on_cpu())
 
 
-__all__ = ["filter_dist", "int8_l2dist", "l2dist", "quantize_int8"]
+__all__ = [
+    "filter_dist",
+    "filter_dist_gather",
+    "int8_l2dist",
+    "l2dist",
+    "quantize_int8",
+]

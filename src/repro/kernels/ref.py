@@ -6,6 +6,7 @@ without Pallas support.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 INF = jnp.float32(jnp.inf)
@@ -44,6 +45,50 @@ def filter_dist_ref(
         & (labels[..., 2] <= cc)
         & (cc <= labels[..., 3])
         & (cand_ids >= 0)
+    )
+    return jnp.where(ok, dist, INF)
+
+
+def filter_dist_gather_ref(
+    table: jnp.ndarray,       # [n, D] full vector table (f32 or int8)
+    norms: jnp.ndarray,       # [n] f32 cached ‖c‖² (of the dequantized rows)
+    q: jnp.ndarray,           # [B, D] query vectors
+    cand_ids: jnp.ndarray,    # [B, C] int32 candidate row ids (-1 = padding)
+    labels: jnp.ndarray,      # [B, C, 4] int32 label rectangles (l, r, b, e)
+    state: jnp.ndarray,       # [B, 2] int32 canonical rank state (a, c)
+    visited: jnp.ndarray,     # [B, ceil(n/32)] uint32 bit-packed visited set
+    scales: jnp.ndarray | None = None,   # [n] f32 int8 dequant scales
+) -> jnp.ndarray:
+    """Oracle for the gather-fused kernel: gathers the candidate rows itself
+    (materializing the [B, C, D] intermediate the Pallas kernel avoids) and
+    applies the identical arithmetic — cached-norm distance
+    ``‖c‖² − 2·q·c + ‖q‖²`` plus label-validity AND not-visited masking.
+
+    Returns [B, C] f32: squared L2 where the tuple is active for (a, c) and
+    the candidate's bit is clear in ``visited``; +inf otherwise.
+    """
+    n = table.shape[0]
+    q = q.astype(jnp.float32)
+    safe = jnp.clip(cand_ids, 0, n - 1)
+    cand = table[safe].astype(jnp.float32)            # [B, C, D]
+    cross = jnp.einsum("bd,bcd->bc", q, cand)
+    if scales is not None:
+        cross = cross * scales[safe]
+    qs = jnp.sum(q * q, axis=-1, keepdims=True)
+    dist = norms[safe] - 2.0 * cross + qs
+    a = state[:, 0:1]
+    cc = state[:, 1:2]
+    word = jnp.take_along_axis(visited, safe >> 5, axis=1)
+    shift = (safe & 31).astype(jnp.uint32)
+    seen = (jax.lax.shift_right_logical(word, shift)
+            & jnp.uint32(1)) == jnp.uint32(1)
+    ok = (
+        (labels[..., 0] <= a)
+        & (a <= labels[..., 1])
+        & (labels[..., 2] <= cc)
+        & (cc <= labels[..., 3])
+        & (cand_ids >= 0)
+        & ~seen
     )
     return jnp.where(ok, dist, INF)
 

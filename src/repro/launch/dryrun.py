@@ -341,6 +341,7 @@ def run_udg_serving_cell(
             sds((shards, n_l, d), vdt),          # vectors
             sds((shards, n_l, E), i32),          # nbr
             sds((shards, n_l, E, 4), i32),       # labels
+            sds((shards, n_l), f32),             # norms (cached ‖v‖²)
             sds((shards, ux), f32),              # U_X
             sds((shards, ux), f32),              # U_Y
             sds((shards,), i32),                 # num_y

@@ -1,23 +1,39 @@
 """Batched lockstep UDG search (jit/pjit-able) — TPU adaptation of Alg. 2.
 
-Every query in the batch advances one beam expansion per iteration of a
+Every query in the batch advances one *step* per iteration of a
 ``lax.while_loop``; finished queries no-op behind masks until the whole
-batch terminates. Per iteration and per query:
+batch terminates. Per iteration and per query the fused path (default):
 
-  1. select the best unexpanded beam entry (fixed-size beam = pool+ann);
-  2. gather its padded neighbor/label rows;
-  3. fused label-test + distance (Pallas ``filter_dist``; +inf = inactive);
-  4. suppress visited/duplicate candidates, mark the rest visited;
+  1. select the best ``expand`` (M ≥ 1) unexpanded beam entries (fixed-size
+     beam = pool+ann) — multi-expand amortizes the while-loop/sort overhead
+     across M beam expansions and cuts iteration count for wide beams;
+  2. read their padded neighbor ids/label rows ([B, M*E] int32 — metadata
+     only, no vectors);
+  3. gather-fused label test + visited test + distance
+     (``ops.filter_dist_gather``): the kernel DMAs exactly the needed vector
+     rows from the HBM-resident table (scalar-prefetched ids, double-
+     buffered VMEM tiles) and computes ``‖c‖² − 2·q·c + ‖q‖²`` from cached
+     per-node norms — the ``[B, E, D]`` XLA-gathered intermediate of the
+     unfused path never materializes;
+  4. suppress intra-batch duplicates, set the surviving candidates' bits in
+     a bit-packed ``[B, ceil(n/32)]`` uint32 visited bitmap (the kernel
+     already suppressed previously-visited candidates in-kernel);
   5. merge candidates into the beam with a stable sort, keep the best L.
+
+``fused=False`` keeps the original loop — XLA gather of a dense ``[B, E, D]``
+candidate tensor, per-iteration ``sum(c*c)`` recompute, dense ``[B, n]`` bool
+visited — as the parity baseline (``tests/test_batched_search.py`` pins the
+two paths to identical results).
 
 Termination — "no unexpanded entry within the beam" — is the batched
 equivalent of Alg. 2 line 7 (the best pool entry being worse than the worst
 of a full ann): any pool entry that survives the beam merge is by
 construction within the current top-L, and everything else is discarded.
 
-The visited set is a dense [B, n] bool in HBM (a bit-packed variant is a
-documented follow-up; at the scales exercised here the dense form is faster
-than unpack/pack round-trips).
+int8-quantized tables ride the same loops: pass ``scales`` ([n] f32) and the
+kernel (or the unfused gather) dequantizes per candidate; ``norms`` must
+then be the norms of the *dequantized* rows so cached-norm distances match
+a dequantize-then-score oracle.
 """
 from __future__ import annotations
 
@@ -59,10 +75,13 @@ def prepare_states(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "beam", "max_iters", "use_ref", "unroll_iters")
+    jax.jit,
+    static_argnames=(
+        "k", "beam", "max_iters", "use_ref", "fused", "expand", "unroll_iters"
+    ),
 )
 def _batched_search_core(
-    vectors: jnp.ndarray,   # [n, D]
+    vectors: jnp.ndarray,   # [n, D] f32 (or int8 with scales)
     nbr: jnp.ndarray,       # [n, E] int32
     labels: jnp.ndarray,    # [n, E, 4] int32
     q: jnp.ndarray,         # [B, D]
@@ -73,14 +92,21 @@ def _batched_search_core(
     beam: int,
     max_iters: int,
     use_ref: bool,
+    fused: bool = True,
+    expand: int = 1,
     unroll_iters: int = 0,
     scales: jnp.ndarray | None = None,   # [n] f32: int8-quantized vectors
+    norms: jnp.ndarray | None = None,    # [n] f32: cached ‖c‖² (fused path)
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     n, D = vectors.shape
     B = q.shape[0]
     E = nbr.shape[1]
     L = beam
     q = q.astype(jnp.float32)
+    if not fused and expand != 1:
+        raise ValueError("multi-expand (expand > 1) requires fused=True")
+    if not 1 <= expand <= beam:
+        raise ValueError(f"expand={expand} must be in [1, beam={beam}]")
 
     def deq(rows, idx):
         """Gathered candidate rows in f32 (dequantizing int8 storage)."""
@@ -98,55 +124,132 @@ def _batched_search_core(
     beam_exp = jnp.zeros((B, L), dtype=bool)
     beam_ids = beam_ids.at[:, 0].set(jnp.where(has_ep, ep, -1))
     beam_d = beam_d.at[:, 0].set(jnp.where(has_ep, d_ep, _INF))
-    visited = jnp.zeros((B, n), dtype=bool)
-    visited = visited.at[jnp.arange(B), ep_safe].max(has_ep)
 
     def cond(carry):
         _, beam_d_, beam_exp_, _, it = carry
         active = jnp.any(~beam_exp_ & jnp.isfinite(beam_d_))
         return jnp.logical_and(it < max_iters, active)
 
-    def body(carry):
-        beam_ids_, beam_d_, beam_exp_, visited_, it = carry
-        # 1. best unexpanded entry per query
-        cand_d = jnp.where(beam_exp_, _INF, beam_d_)
-        j = jnp.argmin(cand_d, axis=1)
-        live = jnp.take_along_axis(cand_d, j[:, None], 1)[:, 0] < _INF
-        cur = jnp.take_along_axis(beam_ids_, j[:, None], 1)[:, 0]
-        cur_safe = jnp.where(live, cur, 0)
-        beam_exp_ = beam_exp_ | (jax.nn.one_hot(j, L, dtype=bool) & live[:, None])
-        # 2. gather neighbor rows
-        nb = nbr[cur_safe]                          # [B, E]
-        lb = labels[cur_safe]                       # [B, E, 4]
-        nb = jnp.where(live[:, None], nb, -1)
-        nb_safe = jnp.clip(nb, 0, n - 1)
-        cand_vecs = deq(vectors[nb_safe], nb_safe)   # [B, E, D] f32
-        # 3. fused label test + distance
-        d_new = ops.filter_dist(q, cand_vecs, lb, states, nb, use_ref=use_ref)
-        # 4. visited + duplicate suppression
-        seen = jnp.take_along_axis(visited_, jnp.clip(nb, 0, n - 1).astype(jnp.int32), 1)
-        d_new = jnp.where(seen | (nb < 0), _INF, d_new)
-        id_key = jnp.where(jnp.isfinite(d_new), nb, jnp.int32(n))
-        order = jnp.argsort(id_key, axis=1)
-        ids_s = jnp.take_along_axis(nb, order, 1)
-        d_s = jnp.take_along_axis(d_new, order, 1)
-        dup = jnp.concatenate(
-            [jnp.zeros((B, 1), bool), ids_s[:, 1:] == ids_s[:, :-1]], axis=1
+    if fused:
+        M = expand
+        ME = M * E
+        if norms is None:
+            v32 = vectors.astype(jnp.float32)
+            norms_ = jnp.sum(v32 * v32, axis=1)
+            if scales is not None:
+                norms_ = norms_ * scales * scales
+        else:
+            norms_ = norms.astype(jnp.float32)
+        W = (n + 31) // 32
+        visited = jnp.zeros((B, W), dtype=jnp.uint32)
+        ep_bit = jnp.where(
+            has_ep,
+            jnp.uint32(1) << (ep_safe & 31).astype(jnp.uint32),
+            jnp.uint32(0),
         )
-        d_s = jnp.where(dup, _INF, d_s)
-        keep = jnp.isfinite(d_s)
-        rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, E))
-        visited_ = visited_.at[rows, jnp.clip(ids_s, 0, n - 1)].max(keep)
-        # 5. stable merge, keep best L
-        all_d = jnp.concatenate([beam_d_, d_s], axis=1)
-        all_ids = jnp.concatenate([beam_ids_, ids_s], axis=1)
-        all_exp = jnp.concatenate(
-            [beam_exp_, jnp.ones((B, E), dtype=bool) & ~keep], axis=1
-        )
-        sd, si, se = jax.lax.sort(
-            (all_d, all_ids, all_exp), dimension=1, num_keys=1, is_stable=True
-        )
-        return (si[:, :L], sd[:, :L], se[:, :L], visited_, it + 1)
+        visited = visited.at[jnp.arange(B), ep_safe >> 5].add(ep_bit)
+
+        def body(carry):
+            beam_ids_, beam_d_, beam_exp_, visited_, it = carry
+            # 1. best M unexpanded entries per query
+            cand_d = jnp.where(beam_exp_, _INF, beam_d_)
+            if M == 1:
+                j = jnp.argmin(cand_d, axis=1)[:, None]            # [B, 1]
+            else:
+                _, j = jax.lax.top_k(-cand_d, M)                   # [B, M]
+            sel_d = jnp.take_along_axis(cand_d, j, 1)
+            live = sel_d < _INF                                    # [B, M]
+            cur = jnp.take_along_axis(beam_ids_, j, 1)
+            cur_safe = jnp.where(live, cur, 0)
+            rows_m = jnp.broadcast_to(jnp.arange(B)[:, None], (B, M))
+            beam_exp_ = beam_exp_.at[rows_m, j].max(live)
+            # 2. neighbor metadata only — ids + label rectangles
+            nb = jnp.where(live[:, :, None], nbr[cur_safe], -1)    # [B, M, E]
+            lb = labels[cur_safe]                                  # [B, M, E, 4]
+            nb = nb.reshape(B, ME)
+            lb = lb.reshape(B, ME, 4)
+            # 3. gather-fused label + visited test + cached-norm distance
+            d_new = ops.filter_dist_gather(
+                vectors, norms_, q, nb, lb, states, visited_,
+                scales=scales, use_ref=use_ref,
+            )
+            # 4. intra-batch duplicate suppression + bitmap update
+            id_key = jnp.where(jnp.isfinite(d_new), nb, jnp.int32(n))
+            order = jnp.argsort(id_key, axis=1)
+            ids_s = jnp.take_along_axis(nb, order, 1)
+            d_s = jnp.take_along_axis(d_new, order, 1)
+            dup = jnp.concatenate(
+                [jnp.zeros((B, 1), bool), ids_s[:, 1:] == ids_s[:, :-1]], axis=1
+            )
+            d_s = jnp.where(dup, _INF, d_s)
+            keep = jnp.isfinite(d_s)
+            ids_safe = jnp.clip(ids_s, 0, n - 1)
+            rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, ME))
+            # kept candidates are deduped and previously unvisited, so each
+            # (query, bit) lands at most once — scatter-add == scatter-or
+            bits = jnp.where(
+                keep,
+                jnp.uint32(1) << (ids_safe & 31).astype(jnp.uint32),
+                jnp.uint32(0),
+            )
+            visited_ = visited_.at[rows, ids_safe >> 5].add(bits)
+            # 5. stable merge, keep best L
+            all_d = jnp.concatenate([beam_d_, d_s], axis=1)
+            all_ids = jnp.concatenate([beam_ids_, ids_s], axis=1)
+            all_exp = jnp.concatenate(
+                [beam_exp_, jnp.ones((B, ME), dtype=bool) & ~keep], axis=1
+            )
+            sd, si, se = jax.lax.sort(
+                (all_d, all_ids, all_exp), dimension=1, num_keys=1,
+                is_stable=True,
+            )
+            return (si[:, :L], sd[:, :L], se[:, :L], visited_, it + 1)
+
+    else:
+        visited = jnp.zeros((B, n), dtype=bool)
+        visited = visited.at[jnp.arange(B), ep_safe].max(has_ep)
+
+        def body(carry):
+            beam_ids_, beam_d_, beam_exp_, visited_, it = carry
+            # 1. best unexpanded entry per query
+            cand_d = jnp.where(beam_exp_, _INF, beam_d_)
+            j = jnp.argmin(cand_d, axis=1)
+            live = jnp.take_along_axis(cand_d, j[:, None], 1)[:, 0] < _INF
+            cur = jnp.take_along_axis(beam_ids_, j[:, None], 1)[:, 0]
+            cur_safe = jnp.where(live, cur, 0)
+            beam_exp_ = beam_exp_ | (jax.nn.one_hot(j, L, dtype=bool) & live[:, None])
+            # 2. gather neighbor rows
+            nb = nbr[cur_safe]                          # [B, E]
+            lb = labels[cur_safe]                       # [B, E, 4]
+            nb = jnp.where(live[:, None], nb, -1)
+            nb_safe = jnp.clip(nb, 0, n - 1)
+            cand_vecs = deq(vectors[nb_safe], nb_safe)   # [B, E, D] f32
+            # 3. fused label test + distance
+            d_new = ops.filter_dist(q, cand_vecs, lb, states, nb, use_ref=use_ref)
+            # 4. visited + duplicate suppression
+            seen = jnp.take_along_axis(visited_, jnp.clip(nb, 0, n - 1).astype(jnp.int32), 1)
+            d_new = jnp.where(seen | (nb < 0), _INF, d_new)
+            id_key = jnp.where(jnp.isfinite(d_new), nb, jnp.int32(n))
+            order = jnp.argsort(id_key, axis=1)
+            ids_s = jnp.take_along_axis(nb, order, 1)
+            d_s = jnp.take_along_axis(d_new, order, 1)
+            dup = jnp.concatenate(
+                [jnp.zeros((B, 1), bool), ids_s[:, 1:] == ids_s[:, :-1]], axis=1
+            )
+            d_s = jnp.where(dup, _INF, d_s)
+            keep = jnp.isfinite(d_s)
+            rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, E))
+            visited_ = visited_.at[rows, jnp.clip(ids_s, 0, n - 1)].max(keep)
+            # 5. stable merge, keep best L
+            all_d = jnp.concatenate([beam_d_, d_s], axis=1)
+            all_ids = jnp.concatenate([beam_ids_, ids_s], axis=1)
+            all_exp = jnp.concatenate(
+                [beam_exp_, jnp.ones((B, E), dtype=bool) & ~keep], axis=1
+            )
+            sd, si, se = jax.lax.sort(
+                (all_d, all_ids, all_exp), dimension=1, num_keys=1, is_stable=True
+            )
+            return (si[:, :L], sd[:, :L], se[:, :L], visited_, it + 1)
 
     carry = (beam_ids, beam_d, beam_exp, visited, jnp.int32(0))
     if unroll_iters > 0:
@@ -171,11 +274,25 @@ def batched_udg_search(
     beam: int = 64,
     max_iters: int | None = None,
     use_ref: bool = False,
+    fused: bool = True,
+    expand: int = 1,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """End-to-end batched query: canonicalize on host, search on device."""
+    """End-to-end batched query: canonicalize on host, search on device.
+
+    Uses the graph's int8 storage (``dg.vec_q`` + ``dg.scales``, exported
+    with ``quantize_int8=True``) when present, and its cached norms on the
+    fused path. ``fused=False`` selects the pre-gather parity baseline
+    (dense visited, per-iteration norm recompute)."""
     states, ep = prepare_states(dg, s_q, t_q)
+    if dg.vec_q is not None:
+        vectors = jnp.asarray(dg.vec_q)
+        scales = jnp.asarray(dg.scales)
+    else:
+        vectors = jnp.asarray(dg.vectors)
+        scales = None
+    norms = jnp.asarray(dg.norms) if (fused and dg.norms is not None) else None
     ids, d = _batched_search_core(
-        jnp.asarray(dg.vectors),
+        vectors,
         jnp.asarray(dg.nbr),
         jnp.asarray(dg.labels),
         jnp.asarray(np.asarray(q, dtype=np.float32)),
@@ -185,5 +302,9 @@ def batched_udg_search(
         beam=beam,
         max_iters=max_iters if max_iters is not None else 2 * beam,
         use_ref=use_ref,
+        fused=fused,
+        expand=expand,
+        scales=scales,
+        norms=norms,
     )
     return np.asarray(ids), np.asarray(d)

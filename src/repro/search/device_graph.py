@@ -8,8 +8,11 @@ lists of labeled tuples) is exported as
 
 with E = max labeled degree rounded up to a lane multiple. Entry lookup and
 canonicalization grids ride along so a query can be served end-to-end on
-device. Optionally carries int8-quantized vectors for the bandwidth-saving
-distance path.
+device, as do per-node squared norms (cached once here so the gather-fused
+kernel never re-reduces ``sum(c*c)``) and — with ``quantize_int8=True`` —
+int8 storage + per-vector scales for the bandwidth-saving distance path.
+The static node capacity also fixes the width of the search loop's
+bit-packed visited bitmap (``visited_words``).
 
 For the streaming subsystem (repro.stream) the export additionally supports
 *fixed capacities*: node and edge dimensions padded to caller-chosen static
@@ -38,6 +41,10 @@ class DeviceGraph:
     entry_node: np.ndarray     # [num_x] int32 (-1 = none)
     entry_y_rank: np.ndarray   # [num_x] int32
     relation: str
+    norms: np.ndarray | None = None   # [n] f32 cached ‖v‖² (of the rows the
+                                      # search scores: dequantized if int8)
+    vec_q: np.ndarray | None = None   # [n, d] int8 quantized storage
+    scales: np.ndarray | None = None  # [n] f32 per-vector dequant scales
 
     @property
     def n(self) -> int:
@@ -47,11 +54,20 @@ class DeviceGraph:
     def max_degree(self) -> int:
         return int(self.nbr.shape[1])
 
+    @property
+    def visited_words(self) -> int:
+        """Width of the bit-packed per-query visited bitmap (uint32 words).
+
+        Node capacity is static, so this is static too — the serving step's
+        ``[B, visited_words]`` bitmap keeps one shape across epoch swaps."""
+        return (self.n + 31) // 32
+
     def nbytes(self) -> int:
+        opt = [a for a in (self.norms, self.vec_q, self.scales) if a is not None]
         return sum(
             a.nbytes
             for a in (self.vectors, self.nbr, self.labels, self.U_X, self.U_Y,
-                      self.entry_node, self.entry_y_rank)
+                      self.entry_node, self.entry_y_rank, *opt)
         )
 
 
@@ -62,6 +78,7 @@ def export_device_graph(
     lane: int = 8,
     node_capacity: int | None = None,
     edge_capacity: int | None = None,
+    quantize_int8: bool = False,
 ) -> DeviceGraph:
     """Pad the host adjacency into dense arrays (E = max degree, lane-aligned).
 
@@ -71,6 +88,14 @@ def export_device_graph(
     Rows whose labeled degree exceeds ``edge_capacity`` keep their earliest
     tuples — those come from the threshold sweep (the connectivity-critical
     edges); patch tuples are appended last and are the first to be dropped.
+
+    Per-node squared norms are precomputed here — once per export instead of
+    once per beam expansion — so the gather-fused kernel scores candidates
+    as ``‖c‖² − 2·q·c + ‖q‖²`` with a cached vector load. With
+    ``quantize_int8`` the export additionally carries int8 storage
+    (``vec_q`` + per-vector ``scales``; 4x less gather traffic), and the
+    cached norms are of the *dequantized* rows so distances match a
+    dequantize-then-score oracle exactly.
     """
     if et is None:
         et = EntryTable(g)
@@ -96,6 +121,16 @@ def export_device_graph(
     if n_pad > g.n:
         vectors = np.zeros((n_pad, g.dim), dtype=np.float32)
         vectors[: g.n] = g.vectors
+    vec_q = scales = None
+    if quantize_int8:
+        v32 = np.asarray(vectors, dtype=np.float32)
+        amax = np.maximum(np.max(np.abs(v32), axis=1), 1e-12)
+        scales = (amax / 127.0).astype(np.float32)
+        vec_q = np.clip(np.round(v32 / scales[:, None]), -127, 127).astype(np.int8)
+        scored = vec_q.astype(np.float32) * scales[:, None]
+    else:
+        scored = np.asarray(vectors, dtype=np.float32)
+    norms = np.sum(scored * scored, axis=1, dtype=np.float32)
     ent = et.device_arrays()
     return DeviceGraph(
         vectors=vectors,
@@ -106,6 +141,9 @@ def export_device_graph(
         entry_node=ent["entry_node"],
         entry_y_rank=ent["entry_y_rank"],
         relation=g.relation.name,
+        norms=norms,
+        vec_q=vec_q,
+        scales=scales,
     )
 
 

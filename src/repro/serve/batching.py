@@ -127,12 +127,14 @@ class StreamingServer:
         k: int = 10,
         beam: int = 64,
         use_ref: bool = True,
+        fused: bool = True,
         timeout_s: float = 0.01,
     ):
         self.index = index
         self.k = k
         self.beam = beam
         self.use_ref = use_ref
+        self.fused = fused
         self.batcher = RequestBatcher(batch_size, index.dim, timeout_s=timeout_s)
         self._worker: Optional[threading.Thread] = None
         self._worker_err: Optional[BaseException] = None
@@ -158,7 +160,8 @@ class StreamingServer:
             return {}
         q, s_q, t_q, req_ids, n_real = batch
         ids, d = self.index.search(
-            q, s_q, t_q, k=self.k, beam=self.beam, use_ref=self.use_ref
+            q, s_q, t_q, k=self.k, beam=self.beam, use_ref=self.use_ref,
+            fused=self.fused,
         )
         return {rid: (ids[i], d[i]) for i, rid in enumerate(req_ids[:n_real])}
 

@@ -40,6 +40,7 @@ class ShardedIndex:
     vectors: np.ndarray       # [shards, n_l, d]
     nbr: np.ndarray           # [shards, n_l, E]
     labels: np.ndarray        # [shards, n_l, E, 4]
+    norms: np.ndarray         # [shards, n_l] f32 cached ‖v‖² per node
     U_X: np.ndarray           # [shards, ux_max] f32, +inf padded
     U_Y: np.ndarray           # [shards, uy_max] f32, +inf padded (keeps the
                               # row sorted, so device searchsorted is exact)
@@ -86,6 +87,7 @@ def build_sharded_index(
     vec = np.stack([dg.vectors for dg in dgs])
     nbr = np.stack([padE(dg.nbr, E, -1) for dg in dgs])
     lab = np.stack([padE(dg.labels, E, 0) for dg in dgs])
+    nrm = np.stack([dg.norms for dg in dgs])
     UX = np.full((num_shards, ux), np.inf, np.float32)
     UY = np.full((num_shards, uy), np.inf, np.float32)
     ent = np.full((num_shards, ux), -1, np.int32)
@@ -99,8 +101,9 @@ def build_sharded_index(
         ent[i, :kx] = dg.entry_node
         enty[i, :kx] = dg.entry_y_rank
     return ShardedIndex(
-        vectors=vec, nbr=nbr, labels=lab, U_X=UX, U_Y=UY, num_y=num_y,
-        entry_node=ent, entry_y_rank=enty, relation=relation, n_local=n_l,
+        vectors=vec, nbr=nbr, labels=lab, norms=nrm, U_X=UX, U_Y=UY,
+        num_y=num_y, entry_node=ent, entry_y_rank=enty, relation=relation,
+        n_local=n_l,
     )
 
 
@@ -136,30 +139,40 @@ def make_serving_step(
     use_ref_kernel: bool = True,
     unroll_iters: int = 0,
     int8_vectors: bool = False,
+    fused: bool = True,
+    expand: int = 1,
 ):
     """Build the jitted shard_map serving step for ``mesh``.
 
     Signature of the returned fn:
-      (vectors, nbr, labels, U_X, U_Y, num_y, entry_node, entry_y_rank,
-       q, xq, yq[, scales]) -> (global_ids [B, k], dists [B, k])
+      (vectors, nbr, labels, norms, U_X, U_Y, num_y, entry_node,
+       entry_y_rank, q, xq, yq[, scales]) -> (global_ids [B, k], dists [B, k])
     with the database arrays carrying the leading shard dim. With
     ``int8_vectors`` the database is int8 + per-vector f32 scales (4x less
     HBM traffic on beam-expansion gathers — EXPERIMENTS.md §Perf U3).
+    ``fused`` selects the gather-fused beam expansion (in-kernel HBM gather
+    off the cached ``norms``, bit-packed visited); ``expand`` widens each
+    iteration to the best M unexpanded beam entries.
     """
     max_iters = max_iters if max_iters is not None else 2 * beam
     batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
-    def shard_fn(vec, nbr, lab, UX, UY, num_y, ent, enty, q, xq, yq,
+    def shard_fn(vec, nbr, lab, nrm, UX, UY, num_y, ent, enty, q, xq, yq,
                  scales=None):
         # leading shard dim is 1 on-device
-        vec, nbr, lab = vec[0], nbr[0], lab[0]
+        vec, nbr, lab, nrm = vec[0], nbr[0], lab[0], nrm[0]
         UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
         states, ep = _canonicalize_local(UX, UY, num_y[0], ent, enty, xq, yq)
+        # cached norms must match the rows the kernel scores: ShardedIndex
+        # stacks f32-row norms, so on the int8 path they are dropped and the
+        # core recomputes sum(c_q^2)*scale^2 (dequantized norms) per batch
         ids_l, d_l = _batched_search_core(
             vec, nbr, lab, q, states, ep,
             k=k, beam=beam, max_iters=max_iters, use_ref=use_ref_kernel,
+            fused=fused, expand=expand,
             unroll_iters=unroll_iters,
             scales=scales[0] if scales is not None else None,
+            norms=None if int8_vectors else nrm,
         )
         shard_id = jax.lax.axis_index("model")
         n_l = vec.shape[0]
@@ -192,10 +205,7 @@ def make_serving_step(
 
     shard_spec = P("model")
     qspec = P(batch_axes)
-    in_specs = (
-        shard_spec, shard_spec, shard_spec, shard_spec, shard_spec,
-        shard_spec, shard_spec, shard_spec, qspec, qspec, qspec,
-    )
+    in_specs = (shard_spec,) * 9 + (qspec, qspec, qspec)
     if int8_vectors:
         in_specs = in_specs + (shard_spec,)
     fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
@@ -223,8 +233,8 @@ def serve_batch(
     )
     step = make_serving_step(mesh, idx.relation, k=k, beam=beam, merge=merge)
     gids, d = step(
-        idx.vectors, idx.nbr, idx.labels, idx.U_X, idx.U_Y, idx.num_y,
-        idx.entry_node, idx.entry_y_rank,
+        idx.vectors, idx.nbr, idx.labels, idx.norms, idx.U_X, idx.U_Y,
+        idx.num_y, idx.entry_node, idx.entry_y_rank,
         np.asarray(q, np.float32),
         np.asarray(xq, np.float32),
         np.asarray(yq, np.float32),
@@ -313,12 +323,13 @@ class ShardedStreamingIndex:
     # --- host-merge query path ------------------------------------------------
 
     def search(
-        self, q, s_q, t_q, *, k: int = 10, beam: int = 64, use_ref: bool = True
+        self, q, s_q, t_q, *, k: int = 10, beam: int = 64,
+        use_ref: bool = True, fused: bool = True,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Query every shard (one shared jit trace) and merge per-shard
         top-k by distance. Top-k over a union = merge of per-shard top-k."""
         per = [
-            sh.search(q, s_q, t_q, k=k, beam=beam, use_ref=use_ref)
+            sh.search(q, s_q, t_q, k=k, beam=beam, use_ref=use_ref, fused=fused)
             for sh in self.shards
         ]
         all_ids = np.concatenate([p[0] for p in per], axis=1)
@@ -347,6 +358,7 @@ class ShardedStreamingIndex:
             "vectors": np.zeros((S, ncap, dim), np.float32),
             "nbr": np.full((S, ncap, ecap), -1, np.int32),
             "labels": np.zeros((S, ncap, ecap, 4), np.int32),
+            "norms": np.zeros((S, ncap), np.float32),
             "live": np.zeros((S, ncap), bool),
             "ext": np.full((S, ncap), -1, np.int32),
             "dvec": np.zeros((S, dcap, dim), np.float32),
@@ -385,6 +397,7 @@ class ShardedStreamingIndex:
         stacked["vectors"][i] = dg.vectors
         stacked["nbr"][i] = dg.nbr
         stacked["labels"][i] = dg.labels
+        stacked["norms"][i] = dg.norms
         stacked["live"][i] = live
         stacked["ext"][i] = ext
         stacked["dvec"][i] = seg.vectors
@@ -410,13 +423,17 @@ def make_streaming_serving_step(
     beam: int = 64,
     max_iters: int | None = None,
     use_ref_kernel: bool = True,
+    fused: bool = True,
+    expand: int = 1,
 ):
     """Jitted shard_map step for streaming serving: two-tier search per
-    shard (tombstone-masked graph beam + fused delta scan) then cross-shard
-    top-k merge. Results are *external* ids, so no round-robin inversion.
+    shard (tombstone-masked gather-fused graph beam + gather-fused delta
+    scan) then cross-shard top-k merge. Results are *external* ids, so no
+    round-robin inversion. All shapes are capacity-fixed, so per-shard
+    epoch swaps keep hitting this one compiled program.
 
     Signature of the returned fn (leading shard dim on database arrays):
-      (vectors, nbr, labels, live, ext, dvec, dlab, dids, dext,
+      (vectors, nbr, labels, norms, live, ext, dvec, dlab, dids, dext,
        U_X, U_Y, num_y, entry_node, entry_y_rank,
        q, xq, yq, dstate) -> (ext_ids [B, k], dists [B, k])
     """
@@ -425,9 +442,9 @@ def make_streaming_serving_step(
     max_iters = max_iters if max_iters is not None else 2 * beam
     batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
-    def shard_fn(vec, nbr, lab, live, ext, dvec, dlab, dids, dext,
+    def shard_fn(vec, nbr, lab, nrm, live, ext, dvec, dlab, dids, dext,
                  UX, UY, num_y, ent, enty, q, xq, yq, dstate):
-        vec, nbr, lab = vec[0], nbr[0], lab[0]
+        vec, nbr, lab, nrm = vec[0], nbr[0], lab[0], nrm[0]
         live, ext = live[0], ext[0]
         dvec, dlab, dids, dext = dvec[0], dlab[0], dids[0], dext[0]
         UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
@@ -436,10 +453,11 @@ def make_streaming_serving_step(
         ids_l, d_l = _batched_search_core(
             vec, nbr, lab, q32, states, ep,
             k=beam, beam=beam, max_iters=max_iters, use_ref=use_ref_kernel,
+            fused=fused, expand=expand, norms=nrm,
         )
         i_k, d_k = two_tier_merge(
             ids_l, d_l, live, ext, q32, dvec, dlab, dids, dext, dstate,
-            k=k, use_ref=use_ref_kernel,
+            k=k, use_ref=use_ref_kernel, fused=fused,
         )
         B = q.shape[0]
         all_i = jax.lax.all_gather(i_k, "model", axis=1)    # [B, S, k]
@@ -451,7 +469,7 @@ def make_streaming_serving_step(
 
     shard_spec = P("model")
     qspec = P(batch_axes)
-    in_specs = (shard_spec,) * 14 + (qspec,) * 4
+    in_specs = (shard_spec,) * 15 + (qspec,) * 4
     fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
     return jax.jit(fn)
 
@@ -482,7 +500,7 @@ def serve_streaming_batch(
         step = make_streaming_serving_step(mesh, k=k, beam=beam)
     ids, d = step(
         stacked["vectors"], stacked["nbr"], stacked["labels"],
-        stacked["live"], stacked["ext"],
+        stacked["norms"], stacked["live"], stacked["ext"],
         stacked["dvec"], stacked["dlab"], stacked["dids"], stacked["dext"],
         stacked["U_X"], stacked["U_Y"], stacked["num_y"],
         stacked["entry_node"], stacked["entry_y_rank"],

@@ -95,6 +95,7 @@ def _empty_device_graph(dim: int, node_capacity: int, edge_capacity: int,
         entry_node=np.empty(0, dtype=np.int32),
         entry_y_rank=np.empty(0, dtype=np.int32),
         relation=relation,
+        norms=np.zeros(node_capacity, dtype=np.float32),
     )
 
 
@@ -147,6 +148,7 @@ class StreamingIndex:
         self._dev_vectors = jnp.asarray(self._dg.vectors)
         self._dev_nbr = jnp.asarray(self._dg.nbr)
         self._dev_labels = jnp.asarray(self._dg.labels)
+        self._dev_norms = jnp.asarray(self._dg.norms)
         self._graph_n = 0
         self._graph_live = np.zeros(node_capacity, dtype=bool)
         self._graph_ext = np.full(node_capacity, -1, dtype=np.int64)
@@ -355,6 +357,7 @@ class StreamingIndex:
             self._dev_vectors = jnp.asarray(dg.vectors)
             self._dev_nbr = jnp.asarray(dg.nbr)
             self._dev_labels = jnp.asarray(dg.labels)
+            self._dev_norms = jnp.asarray(dg.norms)
             self._graph_n = n_new
             self._graph_live = graph_live
             self._graph_ext = graph_ext
@@ -409,6 +412,7 @@ class StreamingIndex:
         beam: int = 64,
         max_iters: Optional[int] = None,
         use_ref: bool = True,
+        fused: bool = True,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Two-tier search; returns (external ids [B, k], sq dists [B, k]),
         -1 padded. A 1-D query vector is treated as a batch of one."""
@@ -431,6 +435,7 @@ class StreamingIndex:
             # read-heavy serving doesn't re-transfer full-capacity buffers.
             dg = self._dg
             dev = (self._dev_vectors, self._dev_nbr, self._dev_labels)
+            dev_norms = self._dev_norms
             if self._dev_mut is None:
                 live = self._graph_live.copy()
                 ext = np.where(live, self._graph_ext, -1).astype(np.int32)
@@ -450,7 +455,7 @@ class StreamingIndex:
             jnp.asarray(dstate),
             k=k, beam=beam,
             max_iters=max_iters if max_iters is not None else 2 * beam,
-            use_ref=use_ref,
+            use_ref=use_ref, fused=fused, norms=dev_norms,
         )
         ids = np.asarray(ids)
         d = np.asarray(d)

@@ -3,18 +3,23 @@
 One jitted step searches both tiers and merges:
 
   graph tier   lockstep beam search over the compacted UDG
-               (``_batched_search_core`` asked for the full beam), then
-               tombstone-masked — deleted nodes still *route* (soft delete,
-               as in FreshDiskANN) but never surface in results;
+               (``_batched_search_core`` asked for the full beam, gather-
+               fused path: in-kernel HBM row DMA + cached norms + bit-packed
+               visited), then tombstone-masked — deleted nodes still *route*
+               (soft delete, as in FreshDiskANN) but never surface in
+               results;
   delta tier   masked brute-force scan of the statically-padded delta
-               segment through the same fused Pallas ``filter_dist`` kernel
-               (label rectangles in monotone float-key space);
+               segment through the same gather-fused Pallas kernel (label
+               rectangles in monotone float-key space; slot ids double as
+               the gather indices, so the ``[B, C, d]`` broadcast of the
+               old scan disappears);
   merge        single ascending sort over the concatenated candidate lists,
                keep the best k, reporting *external* ids.
 
 Every array argument has a capacity-fixed shape, so epoch swaps (compaction
 publishing a new graph tier + drained delta) hit the same jit cache entry —
-no recompilation while serving.
+no recompilation while serving. ``fused=False`` selects the pre-gather
+baseline in both tiers for parity testing.
 """
 from __future__ import annotations
 
@@ -42,6 +47,7 @@ def two_tier_merge(
     *,
     k: int,
     use_ref: bool,
+    fused: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Tombstone-mask the graph beam, scan the delta tier through the fused
     kernel, and merge to the best k external ids. Shared by the single-host
@@ -54,10 +60,20 @@ def two_tier_merge(
     d_g = jnp.where(ok, d_g, jnp.inf)
     eid_g = jnp.where(ok, ext_ids[safe], -1)
 
-    cand = jnp.broadcast_to(dvec[None], (B, C, d))
     lab = jnp.broadcast_to(dlab[None], (B, C, 4))
     slot = jnp.broadcast_to(dids[None], (B, C))
-    d_d = ops.filter_dist(q, cand, lab, dstate, slot, use_ref=use_ref)
+    if fused:
+        # slot ids double as gather indices (dead slots are -1 → masked);
+        # the delta is append-only within an epoch, so norms of the fixed
+        # [C, d] buffer are one tiny reduction per step, not per candidate
+        dnorms = jnp.sum(dvec.astype(jnp.float32) ** 2, axis=1)
+        dvis = jnp.zeros((B, (C + 31) // 32), dtype=jnp.uint32)
+        d_d = ops.filter_dist_gather(
+            dvec, dnorms, q, slot, lab, dstate, dvis, use_ref=use_ref
+        )
+    else:
+        cand = jnp.broadcast_to(dvec[None], (B, C, d))
+        d_d = ops.filter_dist(q, cand, lab, dstate, slot, use_ref=use_ref)
     eid_d = jnp.where(jnp.isfinite(d_d), dext[None], -1)
 
     all_d = jnp.concatenate([d_g, d_d], axis=1)
@@ -67,7 +83,7 @@ def two_tier_merge(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "beam", "max_iters", "use_ref")
+    jax.jit, static_argnames=("k", "beam", "max_iters", "use_ref", "fused")
 )
 def streaming_search_core(
     vectors: jnp.ndarray,      # [N, d]  compacted tier (capacity-padded)
@@ -88,15 +104,18 @@ def streaming_search_core(
     beam: int,
     max_iters: int,
     use_ref: bool,
+    fused: bool = True,
+    norms: jnp.ndarray | None = None,   # [N] f32 cached graph-tier norms
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     q = q.astype(jnp.float32)
     ids_g, d_g = _batched_search_core(
         vectors, nbr, labels, q, states, ep,
         k=beam, beam=beam, max_iters=max_iters, use_ref=use_ref,
+        fused=fused, norms=norms,
     )
     return two_tier_merge(
         ids_g, d_g, live, ext_ids, q, dvec, dlab, dids, dext, dstate,
-        k=k, use_ref=use_ref,
+        k=k, use_ref=use_ref, fused=fused,
     )
 
 

@@ -63,6 +63,145 @@ def test_filter_dist_label_semantics():
     assert np.isinf(out[0, 2])
 
 
+def _gather_case(n, b, c, d, seed=0):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    norms = jnp.sum(table * table, axis=1)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, n, size=(b, c)).astype(np.int32))
+    labels = jnp.asarray(rng.integers(0, 12, size=(b, c, 4)).astype(np.int32))
+    state = jnp.asarray(rng.integers(0, 12, size=(b, 2)).astype(np.int32))
+    W = (n + 31) // 32
+    vis = jnp.asarray(
+        rng.integers(0, 2 ** 32, size=(b, W), dtype=np.uint64).astype(np.uint32)
+    )
+    return table, norms, q, ids, labels, state, vis
+
+
+@pytest.mark.parametrize("n,b,c,d", [
+    (33, 1, 5, 4),        # B=1, n not a multiple of 32 (bitmap tail word)
+    (100, 3, 24, 7),      # odd D
+    (200, 4, 130, 16),    # C not a multiple of the tile
+    (513, 2, 260, 32),    # multi-tile with n % 32 != 0
+])
+def test_filter_dist_gather_matches_ref(n, b, c, d):
+    table, norms, q, ids, labels, state, vis = _gather_case(n, b, c, d)
+    got = np.asarray(
+        ops.filter_dist_gather(table, norms, q, ids, labels, state, vis)
+    )
+    want = np.asarray(
+        ops.filter_dist_gather(table, norms, q, ids, labels, state, vis,
+                               use_ref=True)
+    )
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+def test_filter_dist_gather_small_tile_boundaries():
+    """Direct kernel call with te=8: 3 tiles + padded tail exercises the
+    double-buffered DMA pipeline across tile steps."""
+    from repro.kernels.filter_dist import filter_dist_gather_pallas
+
+    n, b, c, d = 75, 2, 20, 12
+    table, norms, q, ids, labels, state, vis = _gather_case(n, b, c, d, seed=5)
+    safe = jnp.clip(ids, 0, n - 1)
+    g_norms = norms[safe]
+    g_words = jnp.take_along_axis(vis, safe >> 5, axis=1)
+    g_scales = jnp.ones_like(g_norms)
+    got = np.asarray(filter_dist_gather_pallas(
+        table, q, ids, labels, state, g_norms, g_words, g_scales,
+        interpret=True, te=8,
+    ))
+    want = np.asarray(
+        ops.filter_dist_gather(table, norms, q, ids, labels, state, vis,
+                               use_ref=True)
+    )
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+def test_filter_dist_gather_all_invalid_tile():
+    """A tile of nothing but -1 padding must come back all +inf (and the
+    row-0 fetches it degenerates to must not affect other tiles)."""
+    n, b, c, d = 64, 2, 16, 8
+    table, norms, q, ids, labels, state, vis = _gather_case(n, b, c, d, seed=7)
+    ids = jnp.full((b, c), -1, jnp.int32)
+    got = np.asarray(
+        ops.filter_dist_gather(table, norms, q, ids, labels, state, vis)
+    )
+    assert np.all(np.isinf(got))
+
+
+def test_filter_dist_gather_visited_bitmap_semantics():
+    """Bit i>>5 : i&31 set => candidate i suppressed; includes the tail word
+    of an n that is not a multiple of 32."""
+    n, d = 45, 8            # words: [32, 13-bit tail]
+    table = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    norms = jnp.sum(table * table, axis=1)
+    q = jnp.zeros((1, d), jnp.float32)
+    ids = jnp.asarray([[3, 31, 32, 44]], dtype=jnp.int32)
+    labels = jnp.zeros((1, 4, 4), jnp.int32)
+    labels = labels.at[..., 1].set(10).at[..., 3].set(10)   # wide-open rects
+    state = jnp.asarray([[5, 5]], jnp.int32)
+    vis = np.zeros((1, 2), np.uint32)
+    vis[0, 0] = (np.uint32(1) << 31) | np.uint32(1 << 3)    # marks 31 and 3
+    vis[0, 1] = np.uint32(1 << (44 - 32))                   # marks 44 (tail)
+    for use_ref in (True, False):
+        out = np.asarray(ops.filter_dist_gather(
+            table, norms, q, ids, labels, state, jnp.asarray(vis),
+            use_ref=use_ref,
+        ))
+        assert np.isinf(out[0, 0]) and np.isinf(out[0, 1])   # 3, 31 visited
+        assert np.isfinite(out[0, 2])                        # 32 clear
+        assert np.isinf(out[0, 3])                           # 44 visited
+
+
+@pytest.mark.slow
+def test_filter_dist_gather_exhaustive_sweep():
+    """Randomized shape sweep (marked slow): every combination of B=1/odd
+    D/tile-straddling C/bitmap-tail n across several seeds."""
+    cases = [
+        (n, b, c, d, seed)
+        for n in (31, 64, 257)
+        for b in (1, 5)
+        for c in (3, 129)
+        for d in (6, 32)
+        for seed in (0, 1)
+    ]
+    for n, b, c, d, seed in cases:
+        table, norms, q, ids, labels, state, vis = _gather_case(n, b, c, d, seed)
+        got = np.asarray(
+            ops.filter_dist_gather(table, norms, q, ids, labels, state, vis)
+        )
+        want = np.asarray(
+            ops.filter_dist_gather(table, norms, q, ids, labels, state, vis,
+                                   use_ref=True)
+        )
+        fin = np.isfinite(want)
+        np.testing.assert_array_equal(np.isfinite(got), fin, err_msg=str((n, b, c, d)))
+        np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4,
+                                   err_msg=str((n, b, c, d)))
+
+
+def test_filter_dist_gather_int8_scales():
+    n, b, c, d = 90, 3, 33, 16
+    table, _, q, ids, labels, state, vis = _gather_case(n, b, c, d, seed=9)
+    tq, sc = ops.quantize_int8(table)
+    deq = tq.astype(jnp.float32) * sc[:, None]
+    norms = jnp.sum(deq * deq, axis=1)
+    got = np.asarray(ops.filter_dist_gather(
+        tq, norms, q, ids, labels, state, vis, scales=sc,
+    ))
+    want = np.asarray(ops.filter_dist_gather(
+        tq, norms, q, ids, labels, state, vis, scales=sc, use_ref=True,
+    ))
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-3, atol=1e-3)
+
+
 @pytest.mark.parametrize("bq,bc,d", [(4, 9, 8), (65, 200, 48)])
 def test_int8dist_matches_ref_and_f32(bq, bc, d):
     q = _arr((bq, d))

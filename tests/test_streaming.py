@@ -161,12 +161,14 @@ def test_deletes_never_resurface_across_compaction():
     got = returned_ids()
     assert not (got & (dead | dead2 | racing))
     # post-snapshot inserts survived the swap: still live, and querying an
-    # object's own vector under the broad predicate returns it at distance 0
+    # object's own vector under the broad predicate returns it at ~distance 0
+    # (the gather-fused path scores via cached norms, ‖c‖²−2q·c+‖q‖², which
+    # leaves float-rounding residue where the diff-square form gave exact 0)
     live = set(int(e) for e in idx.live_ids())
     assert set(int(e) for e in late) <= live
     for j in (0, 7, 19):
         ids, d = idx.search(vecs[200 + j], broad[0], broad[1], k=K, beam=BEAM)
-        assert int(ids[0]) == int(late[j]) and d[0] == 0.0
+        assert int(ids[0]) == int(late[j]) and d[0] <= 1e-4
     # 5. double delete reports False, unknown id reports False
     assert not idx.delete(int(ext[0]))
     assert not idx.delete(10**9)
