@@ -1,12 +1,65 @@
-"""Paper Table IV: index construction time and size (containment, since
-Hi-PNG is containment-specific). Sizes exclude raw vector storage, matching
-the paper's convention."""
+"""Index construction cost: paper Table IV + batched-vs-sequential UDG build.
+
+Two sections:
+
+* ``table4.*`` — the paper's construction time/size comparison against the
+  baseline methods (containment, since Hi-PNG is containment-specific).
+  Sizes exclude raw vector storage, matching the paper's convention.
+* ``build.*`` — the wave-pipelined device constructor
+  (``build_udg(batched=True)``, repro.core.build_batched) against the
+  sequential host constructor on the same data, with fused-search recall
+  parity. Results land in a machine-readable ``BENCH_build.json`` at the
+  repo root:
+
+    {
+      "bench": "index_build", "n": ..., "dim": ..., "wave": ..., "tiny": ...,
+      "relations": {
+        "<relation>": {
+          "sequential" | "batched": {
+            "build_s":          wall-clock seconds (one window, BuildReport),
+            "broad_searches":   host searches (sequential) / device launches,
+            "waves":            insertion waves (0 = sequential),
+            "sweep_rounds":     threshold-sweep rounds,
+            "num_tuples":       labeled tuples emitted,
+            "num_patch_tuples": §V-B patch tuples,
+            "index_mb":         index bytes (paper Table IV convention) / 1e6,
+            "recall_at_10":     fused batched_udg_search recall vs brute force
+          },
+          "summary": { "speedup": seq/batched build_s,
+                       "recall_delta": batched - sequential recall }
+        }
+      }
+    }
+
+Run ``--tiny`` for the CI smoke (small corpus, containment only, loose
+parity gate); the full run uses n=10000 and asserts the acceptance criteria
+directly: recall parity within 0.5 pt and batched wall-clock below
+sequential.
+"""
 from __future__ import annotations
 
-from benchmarks.common import emit, get_method
+import json
+from pathlib import Path
+
+from benchmarks.common import dataset, emit, get_method, queries
+from repro.core import EntryTable, build_udg
+from repro.data import recall_at_k
+from repro.search import batched_udg_search, export_device_graph
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_build.json"
 
 
-def main() -> None:
+def _fused_recall(g, vecs, s, t, relation: str, *, nq: int, sigma: float = 0.1):
+    """recall@10 of the gather-fused device search over a freshly built index."""
+    qs = queries(vecs, s, t, relation, sigma, nq=nq)
+    dg = export_device_graph(g, EntryTable(g))
+    ids, _ = batched_udg_search(
+        dg, qs.vectors, qs.s_q, qs.t_q, k=10, beam=64, use_ref=True
+    )
+    return float(recall_at_k(ids, qs))
+
+
+def _table4() -> None:
     for kind, kw in [
         ("postfilter", dict(M=16, ef_construction=64)),
         ("acorn", dict(M=16, gamma=6, ef_construction=64)),
@@ -23,5 +76,70 @@ def main() -> None:
         )
 
 
+def main(tiny: bool = False) -> None:
+    if tiny:
+        n, dim, nq, wave = 900, 16, 16, 128
+        relations = ("containment",)
+        parity_tol = 0.05   # 16 queries: single-hit noise, loose gate
+    else:
+        n, dim, nq, wave = 10000, 32, 32, 512
+        relations = ("containment", "overlap")
+        parity_tol = 0.005  # the 0.5 pt acceptance band
+    vecs, s, t = dataset("uniform", n, dim)
+    record = {
+        "bench": "index_build",
+        "n": n, "dim": dim, "wave": wave, "tiny": tiny,
+        "relations": {},
+    }
+    base = dict(M=16, Z=64, K_p=8)
+    for relation in relations:
+        rel_rec = {}
+        for mode, extra in (
+            ("sequential", dict(batched=False)),
+            ("batched", dict(batched=True, wave=wave)),
+        ):
+            g, rep = build_udg(vecs, s, t, relation, **base, **extra)
+            rec = _fused_recall(g, vecs, s, t, relation, nq=nq)
+            rel_rec[mode] = {
+                "build_s": round(rep.seconds, 3),
+                "broad_searches": rep.broad_searches,
+                "waves": rep.waves,
+                "sweep_rounds": rep.sweep_rounds,
+                "num_tuples": rep.num_tuples,
+                "num_patch_tuples": rep.num_patch_tuples,
+                "index_mb": round(rep.index_bytes / 1e6, 3),
+                "recall_at_10": round(rec, 4),
+            }
+            emit(
+                f"build.{relation}.{mode}",
+                rep.seconds * 1e6,
+                build_s=round(rep.seconds, 2),
+                recall=round(rec, 4),
+                searches=rep.broad_searches,
+            )
+        seq, bat = rel_rec["sequential"], rel_rec["batched"]
+        rel_rec["summary"] = {
+            "speedup": round(seq["build_s"] / max(bat["build_s"], 1e-9), 3),
+            "recall_delta": round(bat["recall_at_10"] - seq["recall_at_10"], 4),
+        }
+        record["relations"][relation] = rel_rec
+        assert abs(rel_rec["summary"]["recall_delta"]) <= parity_tol, (
+            f"{relation}: batched/sequential recall diverged: {rel_rec}"
+        )
+        if not tiny:
+            assert rel_rec["summary"]["speedup"] > 1.0, (
+                f"{relation}: batched build not faster at n={n}: {rel_rec}"
+            )
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
+    if not tiny:
+        _table4()
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke scale (small corpus, containment only)")
+    main(tiny=ap.parse_args().tiny)

@@ -21,6 +21,23 @@ class UdgServeConfig:
     relation: str = "containment"
     merge: str = "all_gather"      # all_gather | tournament
     vec_dtype: str = "f32"         # f32 | bf16
+    # index (re)build strategy (repro.core.build_batched); plumb through
+    # build_sharded_index(..., build_kwargs=CONFIG.build_kwargs())
+    build_batched: bool = True
+    build_wave: int = 512          # insertion-wave width
+
+    def build_kwargs(self, pad_nodes: int | None = None) -> dict:
+        """kwargs for ``build_udg`` implementing this config's strategy.
+
+        ``pad_nodes`` defaults to ``n_per_shard`` (static sharded builds);
+        a ``StreamingIndex`` pins its own ``pad_nodes=node_capacity``, so
+        pass that capacity here rather than letting 65536-row tables leak
+        into a smaller streaming tier."""
+        return dict(
+            batched=self.build_batched,
+            wave=self.build_wave,
+            pad_nodes=pad_nodes if pad_nodes is not None else self.n_per_shard,
+        )
 
 
 CONFIG = UdgServeConfig()

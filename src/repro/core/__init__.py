@@ -4,11 +4,13 @@ Public surface:
   - relations / dominance mapping: ``get_relation``, ``RELATIONS``,
     ``DominanceSpace`` (paper §II-A, §III, Table II, Lemma 1)
   - index: ``LabeledGraph`` (§IV-A), ``EntryTable``
-  - construction: ``build_udg`` (practical, §V), ``build_udg_exact``
-    (Algorithm 3 / Theorem 1), ``build_index``
+  - construction: ``build_udg`` (practical, §V; sequential or batched
+    wave-pipelined strategy, see ``repro.core.build_batched``),
+    ``build_udg_exact`` (Algorithm 3 / Theorem 1), ``build_index``
   - search: ``udg_search`` (Algorithm 2), ``search_query``
 """
 from repro.core.build import (
+    BATCHED_AUTO_MIN_N,
     BuildReport,
     build_dedicated_reference,
     build_index,
@@ -25,10 +27,16 @@ from repro.core.predicates import (
     canonical_state_for_query,
     get_relation,
 )
-from repro.core.prune import prune, squared_dists
+from repro.core.prune import (
+    pool_distance_matrix,
+    prune,
+    prune_precomputed,
+    squared_dists,
+)
 from repro.core.search import SearchStats, search_query, udg_search
 
 __all__ = [
+    "BATCHED_AUTO_MIN_N",
     "BuildReport",
     "ConstructionEntry",
     "DominanceSpace",
@@ -46,7 +54,9 @@ __all__ = [
     "build_udg_exact",
     "canonical_state_for_query",
     "get_relation",
+    "pool_distance_matrix",
     "prune",
+    "prune_precomputed",
     "search_query",
     "squared_dists",
     "udg_search",

@@ -7,10 +7,22 @@
 ``build_udg``           the practical constructor: one broad label-ignoring
                         search per insertion (pool size Z), threshold sweep
                         over the shared candidate pool, conservative /
-                        MaxLeap leap policies, and §V-B patch edges.
+                        MaxLeap leap policies, and §V-B patch edges. Two
+                        execution strategies share this entry point —
+                        ``batched=False`` is the original sequential host
+                        loop (the parity oracle), ``batched=True`` the
+                        wave-pipelined device constructor
+                        (``repro.core.build_batched``), and the default
+                        ``batched=None`` picks batched at or above
+                        ``BATCHED_AUTO_MIN_N`` objects.
 ``build_dedicated_reference``
                         the per-state reference constructor used by the
                         Theorem 1 test.
+
+Unit conventions, everywhere in this module: ``a`` / ``c`` / ``x_R`` /
+``x_leap`` and all label rectangle fields are canonical *ranks* (indices
+into ``U_X`` / ``U_Y``, see ``LabeledGraph``), never raw interval floats;
+distances are squared L2 over raw embedding vectors.
 """
 from __future__ import annotations
 
@@ -28,9 +40,27 @@ from repro.core.search import udg_search
 
 LEAP_POLICIES = ("conservative", "maxleap")
 
+# build_udg(batched=None) auto-selects the wave-pipelined constructor at or
+# above this many objects; below it, per-wave jit/transfer overhead beats the
+# host loop's simplicity.
+BATCHED_AUTO_MIN_N = 4096
+
 
 @dataclass
 class BuildReport:
+    """Construction cost accounting (consumed by ``BENCH_build.json``).
+
+    ``seconds`` is one wall-clock window around the entire build (graph
+    allocation through the last patch edge) — there is deliberately no
+    per-insert timer accumulation, which under the batched path would both
+    distort the total (waves interleave device and host work) and add
+    syscall overhead per object. ``index_bytes`` comes from
+    ``LabeledGraph.stats()`` *after* patching, so it is exact for either
+    strategy. ``broad_searches`` counts host searches under the sequential
+    strategy but device launches under the batched one; ``waves`` is 0 for
+    sequential/exact builds and the number of insertion waves otherwise.
+    """
+
     n: int
     seconds: float
     num_tuples: int
@@ -38,6 +68,7 @@ class BuildReport:
     sweep_rounds: int
     broad_searches: int
     index_bytes: int
+    waves: int = 0
 
 
 def _exact_candidates(
@@ -66,9 +97,15 @@ def build_udg_exact(
     *,
     use_graph_search: bool = False,
 ) -> Tuple[LabeledGraph, BuildReport]:
-    """Algorithm 3. With ``use_graph_search=False`` construction searches are
-    exact (ASA) — the setting of Theorem 1. With True, each state-specific
-    search runs UDGSearch on the partially built index (paper line 9)."""
+    """Algorithm 3 (paper §IV-B), the exact single-index constructor.
+
+    With ``use_graph_search=False`` construction searches are exact (the
+    Accurate Search Assumption) — the setting of Theorem 1's lossless
+    guarantee. With True, each state-specific search runs UDGSearch on the
+    partially built index (paper line 9). The threshold sweep walks
+    canonical X *ranks* ``i`` (indices into ``U_X``); all emitted label
+    rectangles are rank-space. Always sequential — this is the correctness
+    anchor, not a throughput path (no ``batched`` strategy)."""
     t0 = time.perf_counter()
     g = LabeledGraph(vectors, s, t, relation)
     order = g.insert_order
@@ -133,12 +170,46 @@ def build_udg(
     *,
     leap: str = "maxleap",
     patch: str = "full",
+    batched: bool | None = None,
+    wave: int = 256,
+    pad_nodes: int | None = None,
+    use_ref: bool = True,
 ) -> Tuple[LabeledGraph, BuildReport]:
-    """Practical UDG constructor (paper §V-A + §V-B)."""
+    """Practical UDG constructor (paper §V-A + §V-B).
+
+    Arguments (units): ``M`` max kept neighbors per PRUNE, ``Z`` broad-pool
+    size, ``K_p`` patch-pool multiplier (pool cap = M*K_p) — all counts;
+    the interval columns ``s``/``t`` are raw floats, mapped to canonical
+    rank space internally.
+
+    Batched-vs-sequential contract: both strategies insert in the same
+    §IV-B order, emit labels by the same leap/patch rules, and satisfy
+    Lemma 2 exactly; they differ only in how the §V-A broad candidate pool
+    is found (host best-first search per object vs one device beam-search
+    launch per ``wave`` objects, intra-wave candidates by exact brute
+    force), so the graphs are near-identical but not bit-identical —
+    parity is pinned by ``tests/test_batched_build.py`` and quantified in
+    ``BENCH_build.json``. ``batched=None`` auto-selects: batched at
+    n >= ``BATCHED_AUTO_MIN_N``, sequential below. ``wave``/``pad_nodes``/
+    ``use_ref`` configure the batched path (see
+    ``repro.core.build_batched.build_udg_batched``) and are ignored by the
+    sequential one.
+    """
     if leap not in LEAP_POLICIES:
         raise ValueError(f"leap must be one of {LEAP_POLICIES}")
     if patch not in PATCH_VARIANTS:
         raise ValueError(f"patch must be one of {PATCH_VARIANTS}")
+    n_obj = int(np.asarray(vectors).shape[0])
+    if batched is None:
+        batched = n_obj >= BATCHED_AUTO_MIN_N
+    if batched:
+        from repro.core.build_batched import build_udg_batched
+
+        return build_udg_batched(
+            vectors, s, t, relation, M=M, Z=Z, K_p=K_p,
+            leap=leap, patch=patch, wave=wave, pad_nodes=pad_nodes,
+            use_ref=use_ref,
+        )
     t0 = time.perf_counter()
     g = LabeledGraph(vectors, s, t, relation)
     order = g.insert_order
@@ -211,7 +282,10 @@ def build_index(
     relation: str,
     **kwargs,
 ) -> Tuple[LabeledGraph, EntryTable, BuildReport]:
-    """Convenience wrapper: practical build + query-time entry table."""
+    """Convenience wrapper: practical build + query-time entry table.
+
+    Forwards ``**kwargs`` to :func:`build_udg` unchanged, including the
+    ``batched``/``wave``/``pad_nodes`` strategy knobs."""
     g, rep = build_udg(vectors, s, t, relation, **kwargs)
     return g, EntryTable(g), rep
 

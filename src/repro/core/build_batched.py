@@ -1,0 +1,231 @@
+"""Batched, device-accelerated UDG construction (paper §V-A/§V-B, wave form).
+
+The sequential practical constructor (``repro.core.build.build_udg`` with
+``batched=False``) runs one host-side ``udg_search`` per inserted object —
+a Python ``heapq`` best-first traversal — which makes construction the
+bottleneck of the whole system once search and streaming are fused Pallas.
+This module restructures the same algorithm around *insertion waves*:
+
+1.  Objects are still inserted in ascending transformed-Y order (the §IV-B
+    order that Theorem 1's induction needs), but ``wave`` of them at a time.
+2.  The broad label-ignoring construction search (§V-A) for a whole wave
+    runs as ONE ``broad_batched_search`` launch against the partially built
+    index: the full vector table lives on device from the start (all rows
+    are known up front; un-inserted rows are unreachable), and the adjacency
+    is a ``BroadExport`` — a unique-neighbor dense table folded in edge-by-
+    edge on the host and re-uploaded once per wave, never per insert. Rows
+    are width-capped at ``max(Z, 2M, 32)`` (earliest neighbors kept): the
+    wave search's per-iteration gather cost is linear in row width while
+    broad-pool recall stays flat down to width ~ Z, so hub rows would
+    otherwise tax every iteration for nothing.
+3.  Earlier members of the *same* wave are not yet in the device graph, so
+    each member's candidate pool is the merge of its device results with
+    exact brute-force distances to its intra-wave predecessors (one
+    ``[W, W]`` einsum per wave) — at the point object ``j`` is processed its
+    pool draws on exactly the objects the sequential constructor could see.
+4.  The threshold sweep + PRUNE + patch-edge emission run on the host but
+    vectorized: one pool x pool distance matrix per insertion (reused by
+    every sweep round via ``prune_precomputed``), per-edge MaxLeap right
+    boundaries as one ``np.minimum``, and label tuples appended in batches
+    (``LabeledGraph.add_bidirectional_batch``) instead of per-edge Python
+    calls.
+
+The emitted labels are identical in form to the sequential constructor's
+(same leap policies, same §V-B patch rule), so Lemma 2 validity holds
+unchanged; only the candidate pools differ (device beam search vs host
+heapq), which shifts recall by well under the 0.5 pt acceptance band — the
+parity test and ``BENCH_build.json`` track it.
+
+All ``a``/``c``/``x_R`` values here are canonical *ranks* (indices into
+``U_X``/``U_Y``), never raw floats; distances are squared L2 on raw vectors.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.graph import LabeledGraph
+from repro.core.patch import add_patch_edges
+from repro.core.prune import pool_distance_matrix, prune_precomputed
+
+_NODE_BUCKET = 256  # table rows padded to a multiple of this → compile reuse
+
+
+def _bucket(n: int) -> int:
+    return max(((n + _NODE_BUCKET - 1) // _NODE_BUCKET) * _NODE_BUCKET, _NODE_BUCKET)
+
+
+def build_udg_batched(
+    vectors: np.ndarray,
+    s: np.ndarray,
+    t: np.ndarray,
+    relation: str,
+    M: int = 16,
+    Z: int = 128,
+    K_p: int = 8,
+    *,
+    leap: str = "maxleap",
+    patch: str = "full",
+    wave: int = 256,
+    pad_nodes: int | None = None,
+    use_ref: bool = True,
+) -> Tuple[LabeledGraph, "BuildReport"]:
+    """Wave-pipelined practical constructor; same contract as ``build_udg``.
+
+    ``wave`` is the insertion-wave width (1 degenerates to per-object device
+    searches). ``pad_nodes`` pads the device table to a fixed row count —
+    pass the streaming tier's ``node_capacity`` so every epoch rebuild hits
+    the same compiled wave search. ``use_ref`` selects the jnp oracle for
+    the in-wave search (the right choice on CPU; on TPU pass False for the
+    gather-fused Pallas kernel). Wall-clock in the returned ``BuildReport``
+    is one perf_counter window around the whole pipeline (device searches,
+    host sweeps, patching — no per-insert accumulation), ``waves`` counts
+    insertion waves, and ``broad_searches`` counts *device search launches*,
+    not per-object searches — the n-to-n/wave reduction is the point.
+    """
+    # Deferred so `repro.core` stays importable (and the sequential path
+    # usable) without jax — the device stack is only pulled in when a
+    # batched build actually runs.
+    import jax.numpy as jnp
+
+    from repro.core.build import BuildReport
+    from repro.search.batched import broad_batched_search
+    from repro.search.device_graph import BroadExport
+
+    t0 = time.perf_counter()
+    g = LabeledGraph(vectors, s, t, relation)
+    order = g.insert_order
+    n = g.n
+    y_max = g.num_y - 1
+    x_rank = g.x_rank
+    y_rank = g.y_rank
+
+    n_pad = max(_bucket(n), pad_nodes or 0)
+    table = np.zeros((n_pad, g.dim), dtype=np.float32)
+    table[:n] = g.vectors
+    dev_table = jnp.asarray(table)
+    dev_norms = jnp.asarray(np.einsum("ij,ij->i", table, table).astype(np.float32))
+
+    # Broad rows capped near the pool size: pool recall is flat down to
+    # width ~ Z while wave-search iteration cost is linear in width.
+    broad_cap = max(int(Z), 2 * int(M), 32)
+    broadx = BroadExport(n_pad, init_degree=broad_cap, max_width=broad_cap)
+    W = max(1, min(int(wave), n))
+    global_ep = int(order[0])
+
+    ins_ids = np.empty(n, dtype=np.int64)
+    ins_x = np.empty(n, dtype=np.int64)
+    cnt = 0
+    rounds = 0
+    launches = 0
+    n_waves = 0
+
+    for w0 in range(0, n, W):
+        ids_w = order[w0 : w0 + W].astype(np.int64)
+        Wn = int(ids_w.size)
+        n_waves += 1
+        wv = table[ids_w]  # [Wn, D] f32
+
+        if w0 > 0:
+            # 2. one broad label-ignoring device search for the whole wave
+            q_pad = np.zeros((W, g.dim), dtype=np.float32)
+            q_pad[:Wn] = wv
+            ep = np.full(W, -1, dtype=np.int32)
+            ep[:Wn] = global_ep
+            dev_ids, dev_d = broad_batched_search(
+                dev_table,
+                dev_norms,
+                jnp.asarray(broadx.view()),
+                jnp.asarray(q_pad),
+                jnp.asarray(ep),
+                k=Z,
+                beam=Z,
+                expand=min(4, Z),  # multi-expand amortizes while-loop overhead
+                use_ref=use_ref,
+            )
+            pool_ids = np.asarray(dev_ids)[:Wn]
+            pool_d = np.asarray(dev_d)[:Wn]
+            launches += 1
+        else:
+            pool_ids = np.full((Wn, 1), -1, dtype=np.int32)
+            pool_d = np.full((Wn, 1), np.inf, dtype=np.float32)
+
+        # 3. exact intra-wave distances (earlier wave members are inserted
+        # before this member is processed, so they belong in its pool).
+        # Gram form keeps this O(W²) memory — a [W, W, D] diff tensor would
+        # not survive production dims.
+        intra = pool_distance_matrix(table, ids_w)
+
+        for wi in range(Wn):
+            vj = int(ids_w[wi])
+            xj = int(x_rank[vj])
+            yj = int(y_rank[vj])
+            if cnt > 0:
+                dev_row = pool_ids[wi]
+                keep = (dev_row >= 0) & np.isfinite(pool_d[wi])
+                cids = np.concatenate(
+                    [dev_row[keep].astype(np.int64), ids_w[:wi]]
+                )
+                cds = np.concatenate(
+                    [pool_d[wi][keep], intra[wi, :wi]]
+                ).astype(np.float32)
+                sel = np.lexsort((cids, cds))[:Z]
+                ann = cids[sel]
+                ann_d = cds[sel]
+                uncovered_from = None
+                if ann.size == 0:
+                    uncovered_from = 0
+                else:
+                    # 4. vectorized sweep: one pool matrix reused per round
+                    dmat = pool_distance_matrix(g.vectors, ann)
+                    ann_x = x_rank[ann].astype(np.int64)
+                    idx_all = np.arange(ann.size)
+                    i = 0
+                    while i <= xj:
+                        live = ann_x >= i
+                        if not live.any():
+                            uncovered_from = i
+                            break
+                        rounds += 1
+                        li = idx_all[live]
+                        N = prune_precomputed(
+                            ann[li], ann_d[li], dmat[np.ix_(li, li)], M
+                        )
+                        nx = x_rank[N].astype(np.int64)
+                        if leap == "conservative":
+                            x_R = int(min(xj, int(nx.min())))
+                            added = g.add_bidirectional_batch(
+                                vj, N, i, x_R, yj, y_max
+                            )
+                            i = x_R + 1
+                        else:  # maxleap
+                            x_leap = int(nx.max())
+                            r_arr = np.minimum(xj, nx)
+                            added = g.add_bidirectional_batch(
+                                vj, N, i, r_arr, yj, y_max
+                            )
+                            i = min(xj, x_leap) + 1
+                        broadx.add_edges(vj, added)
+                if uncovered_from is not None and patch != "none":
+                    sel_patch = add_patch_edges(
+                        g, vj, uncovered_from, xj,
+                        ins_ids[:cnt], ins_x[:cnt], M, K_p, patch,
+                    )
+                    broadx.add_edges(vj, sel_patch)
+            ins_ids[cnt] = vj
+            ins_x[cnt] = xj
+            cnt += 1
+
+    rep = BuildReport(
+        n=n,
+        seconds=time.perf_counter() - t0,
+        num_tuples=g.num_tuples,
+        num_patch_tuples=g.num_patch_tuples,
+        sweep_rounds=rounds,
+        broad_searches=launches,
+        index_bytes=g.stats().index_bytes,
+        waves=n_waves,
+    )
+    return g, rep

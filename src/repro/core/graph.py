@@ -61,6 +61,24 @@ class _AdjList:
         self.e[i] = e
         self.size = i + 1
 
+    def extend(
+        self,
+        nbrs: np.ndarray,
+        l: np.ndarray,
+        r: np.ndarray,
+        b: np.ndarray,
+        e: np.ndarray,
+    ) -> None:
+        k = int(nbrs.shape[0])
+        self._ensure(k)
+        i = self.size
+        self.nbr[i : i + k] = nbrs
+        self.l[i : i + k] = l
+        self.r[i : i + k] = r
+        self.b[i : i + k] = b
+        self.e[i : i + k] = e
+        self.size = i + k
+
     def view(self) -> Tuple[np.ndarray, ...]:
         s = self.size
         return (self.nbr[:s], self.l[:s], self.r[:s], self.b[:s], self.e[:s])
@@ -126,6 +144,53 @@ class LabeledGraph:
     ) -> None:
         self.add_labeled_edge(u, v, l, r, b, e, patch=patch)
         self.add_labeled_edge(v, u, l, r, b, e, patch=patch)
+
+    def add_bidirectional_batch(
+        self,
+        u: int,
+        vs: np.ndarray,
+        l,
+        r,
+        b,
+        e,
+        *,
+        patch: bool = False,
+    ) -> np.ndarray:
+        """Batch form of :meth:`add_bidirectional`: one vectorized append of
+        the forward tuples ``u -> vs`` plus the mirrored reverse tuples.
+
+        ``l``/``r``/``b``/``e`` are scalars or arrays broadcastable against
+        ``vs`` (per-edge right boundaries under the MaxLeap policy). Tuples
+        with an empty rectangle (``l > r`` or ``b > e``) are dropped, exactly
+        as in the scalar path. Returns the neighbor ids actually connected
+        (int32), so callers maintaining an incremental broad export fold in
+        exactly the edges that exist.
+        """
+        vs = np.asarray(vs, dtype=_INT).ravel()
+        if vs.size == 0:
+            return vs
+        l_, r_, b_, e_, vs = np.broadcast_arrays(
+            np.asarray(l, dtype=_INT),
+            np.asarray(r, dtype=_INT),
+            np.asarray(b, dtype=_INT),
+            np.asarray(e, dtype=_INT),
+            vs,
+        )
+        keep = (l_ <= r_) & (b_ <= e_)
+        if not keep.all():
+            vs, l_, r_, b_, e_ = vs[keep], l_[keep], r_[keep], b_[keep], e_[keep]
+        if vs.size == 0:
+            return vs
+        self.adj[u].extend(vs, l_, r_, b_, e_)
+        for v, li, ri, bi, ei in zip(
+            vs.tolist(), l_.tolist(), r_.tolist(), b_.tolist(), e_.tolist()
+        ):
+            self.adj[v].append(u, li, ri, bi, ei)
+        added = 2 * int(vs.size)
+        self.num_tuples += added
+        if patch:
+            self.num_patch_tuples += added
+        return vs
 
     # --- traversal helpers ----------------------------------------------------
 

@@ -26,29 +26,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.graph import LabeledGraph
-from repro.core.prune import squared_dists
+from repro.core.prune import diversity_greedy, pool_distance_matrix, squared_dists
 
 PATCH_VARIANTS = ("none", "previous", "lifetime", "full")
-
-
-def _diversity_prune(
-    vectors: np.ndarray, o_vec: np.ndarray, ids: np.ndarray, dists: np.ndarray, budget: int
-) -> list[int]:
-    """Algorithm 1 lines 4-9 applied to a pre-sorted candidate list."""
-    kept: list[int] = []
-    kept_d: list[float] = []
-    for u, du in zip(ids, dists):
-        if len(kept) >= budget:
-            break
-        if kept:
-            w = np.asarray(kept, dtype=np.int64)
-            dw = np.asarray(kept_d)
-            wu = squared_dists(vectors, vectors[u], w)
-            if np.any((dw < du) & (wu < du)):
-                continue
-        kept.append(int(u))
-        kept_d.append(float(du))
-    return kept
 
 
 def add_patch_edges(
@@ -61,18 +41,27 @@ def add_patch_edges(
     M: int,
     K_p: int,
     variant: str = "full",
-) -> int:
-    """Emit patch edges for the uncovered range [a_L, a_R] of node ``vj``.
+) -> np.ndarray:
+    """Emit patch edges for the uncovered range ``[a_L, a_R]`` of node ``vj``
+    (paper §V-B).
 
-    ``inserted_ids``/``inserted_x`` list previously inserted objects and
-    their canonical X ranks *in insertion order*. Returns #patch neighbors.
+    ``a_L``/``a_R`` are canonical X *ranks* (indices into ``U_X``), not float
+    keys. ``inserted_ids``/``inserted_x`` list previously inserted objects
+    and their canonical X ranks *in insertion order* — under the batched
+    constructor this includes earlier members of the current wave, so the
+    repair pool is identical to the sequential constructor's at the same
+    insertion position. Edge labels are emitted in one vectorized batch
+    (per-edge right boundary ``min{X_v, X_u, a_R}``). Returns the selected
+    patch-neighbor ids (int32, possibly empty) so callers maintaining an
+    incremental broad-adjacency export can fold the new edges in.
     """
+    empty = np.empty(0, dtype=np.int32)
     if variant == "none":
-        return 0
+        return empty
     pool_mask = inserted_x >= a_L
     pool = inserted_ids[pool_mask]
     if pool.size == 0:
-        return 0
+        return empty
 
     if variant == "previous":
         sel = pool[-M:][::-1].tolist()  # most recently inserted, no scoring
@@ -86,9 +75,10 @@ def add_patch_edges(
             pool_x = pool_x[keep]
         o_vec = g.vectors[vj]
         dists = squared_dists(g.vectors, o_vec, pool)
+        pmat = pool_distance_matrix(g.vectors, pool)
 
         sel: list[int] = []
-        rest_ids, rest_d = pool, dists
+        rest_pos = np.arange(pool.size)
         if variant == "full" and pool.size > 0:
             # reserve up to two lifetime anchors by lifetime rank alone
             n_anchor = min(2, pool.size)
@@ -96,12 +86,15 @@ def add_patch_edges(
             sel = [int(pool[i]) for i in anchor_order]
             rest_mask = np.ones(pool.size, dtype=bool)
             rest_mask[anchor_order] = False
-            rest_ids, rest_d = pool[rest_mask], dists[rest_mask]
-        order = np.lexsort((rest_ids, rest_d))
-        rest_ids, rest_d = rest_ids[order], rest_d[order]
+            rest_pos = np.flatnonzero(rest_mask)
+        order = np.lexsort((pool[rest_pos], dists[rest_pos]))
+        rest_pos = rest_pos[order]
+        rest_ids = pool[rest_pos]
         budget = M - len(sel)
-        metric = _diversity_prune(g.vectors, o_vec, rest_ids, rest_d, budget)
-        sel.extend(metric)
+        metric = diversity_greedy(
+            dists[rest_pos], pmat[np.ix_(rest_pos, rest_pos)], budget
+        )
+        sel.extend(int(rest_ids[j]) for j in metric)
         if len(sel) < M:  # backfill with nearest remaining pool members
             chosen = set(sel)
             for u in rest_ids:
@@ -113,7 +106,7 @@ def add_patch_edges(
 
     y_max = g.num_y - 1
     b = int(g.y_rank[vj])
-    for u in sel:
-        r = int(min(g.x_rank[vj], g.x_rank[u], a_R))
-        g.add_bidirectional(vj, int(u), a_L, r, b, y_max, patch=True)
-    return len(sel)
+    sel_arr = np.asarray(sel, dtype=np.int32)
+    r = np.minimum(np.minimum(int(g.x_rank[vj]), g.x_rank[sel_arr]), a_R)
+    g.add_bidirectional_batch(vj, sel_arr, a_L, r, b, y_max, patch=True)
+    return sel_arr

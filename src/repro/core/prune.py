@@ -1,10 +1,24 @@
-"""Algorithm 1: PRUNE — HNSW-style diversity pruning.
+"""Algorithm 1: PRUNE — HNSW-style diversity pruning (paper §IV-B).
 
 Deterministic: candidates are scanned in ascending (distance, id) order; a
 candidate ``u`` is dominated when an already-kept neighbor ``w`` satisfies
 ``d(o, w) < d(o, u)`` and ``d(w, u) < d(o, u)`` (strict, as in the paper).
 Determinism is what lets Theorem 1 equate UDG's per-state subgraphs with the
 dedicated graphs.
+
+Two entry points share the rule:
+
+``prune``              the sequential constructor's form — candidate-to-kept
+                       distances are computed on demand, one ``squared_dists``
+                       row per kept neighbor;
+``prune_precomputed``  the batched constructor's form — the caller supplies
+                       the full candidate x candidate squared-distance matrix
+                       (one Gram-matrix einsum per pool, amortized over every
+                       threshold-sweep round of a wave), so the greedy scan
+                       is pure boolean masking with no distance recomputation.
+
+All distances are *squared* L2 in raw embedding space; ids are original
+object ids (not ranks).
 """
 from __future__ import annotations
 
@@ -17,6 +31,20 @@ def squared_dists(vectors: np.ndarray, q: np.ndarray, ids: np.ndarray) -> np.nda
     """Squared L2 from ``q`` to ``vectors[ids]`` (float32 accumulate)."""
     diff = vectors[ids] - q
     return np.einsum("ij,ij->i", diff, diff)
+
+
+def pool_distance_matrix(vectors: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Symmetric squared-L2 matrix over ``vectors[ids]`` for ``prune_precomputed``.
+
+    Computed via the Gram-matrix identity ``‖a‖² + ‖b‖² − 2·a·b`` (one
+    matmul instead of a [P, P, D] diff tensor) and clamped at zero so float
+    residue on the diagonal can never flip a strict comparison.
+    """
+    pv = np.asarray(vectors[ids], dtype=np.float32)
+    pn = np.einsum("ij,ij->i", pv, pv)
+    dmat = pn[:, None] + pn[None, :] - 2.0 * (pv @ pv.T)
+    np.maximum(dmat, 0.0, out=dmat)
+    return dmat
 
 
 def prune(
@@ -57,3 +85,57 @@ def prune(
         if len(kept) >= M:
             break
     return np.asarray(kept, dtype=np.int32)
+
+
+def diversity_greedy(d_s: np.ndarray, sub: np.ndarray, budget: int) -> list[int]:
+    """Algorithm 1 lines 4-9 over a scan-ordered pool, matrix form.
+
+    ``d_s`` are squared distances to the inserted object in scan order;
+    ``sub[i, j]`` the squared distance between pool members ``i`` and ``j``.
+    ``dom[i, j]`` precomputes "scan-position i dominates j" (the strict
+    test), so the greedy skip check "some kept w dominates u" reduces to one
+    running boolean OR, updated once per KEPT neighbor (<= budget times)
+    instead of per candidate. Returns the kept scan positions. This is the
+    single home of the domination rule's matrix form — both the batched
+    constructor's sweep (via :func:`prune_precomputed`) and the §V-B patch
+    path use it.
+    """
+    if budget <= 0 or d_s.size == 0:
+        return []
+    dom = (d_s[:, None] < d_s[None, :]) & (sub < d_s[None, :])
+    dominated = np.zeros(d_s.shape[0], dtype=bool)
+    kept: list[int] = []
+    for j in range(d_s.shape[0]):
+        if dominated[j]:
+            continue
+        kept.append(j)
+        if len(kept) >= budget:
+            break
+        dominated |= dom[j]
+    return kept
+
+
+def prune_precomputed(
+    cand_ids: np.ndarray,
+    cand_dists: np.ndarray,
+    dmat: np.ndarray,
+    M: int,
+) -> np.ndarray:
+    """Algorithm 1 over a pool with precomputed pairwise distances.
+
+    ``cand_dists[i]`` is the squared distance from the inserted object to
+    candidate ``i`` and ``dmat[i, j]`` the squared distance between
+    candidates ``i`` and ``j`` (see :func:`pool_distance_matrix`). Applies
+    the identical ascending-(distance, id) greedy with the identical strict
+    domination test as :func:`prune`; the only difference is that no
+    distance is computed inside the loop, which is what lets the batched
+    constructor reuse one pool matrix across every sweep round of an
+    insertion. Returns <=M kept ids (int32).
+    """
+    cand_ids = np.asarray(cand_ids, dtype=np.int64)
+    if cand_ids.size == 0:
+        return cand_ids.astype(np.int32)
+    order = np.lexsort((cand_ids, cand_dists))
+    d_s = np.asarray(cand_dists)[order]
+    kept = diversity_greedy(d_s, dmat[np.ix_(order, order)], M)
+    return cand_ids[order[kept]].astype(np.int32)

@@ -1,10 +1,16 @@
 """Batched, jittable UDG search — the TPU-native serving path."""
-from repro.search.device_graph import DeviceGraph, export_device_graph
-from repro.search.batched import batched_udg_search, prepare_states
+from repro.search.device_graph import BroadExport, DeviceGraph, export_device_graph
+from repro.search.batched import (
+    batched_udg_search,
+    broad_batched_search,
+    prepare_states,
+)
 
 __all__ = [
+    "BroadExport",
     "DeviceGraph",
     "batched_udg_search",
+    "broad_batched_search",
     "export_device_graph",
     "prepare_states",
 ]

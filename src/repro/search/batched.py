@@ -83,7 +83,7 @@ def prepare_states(
 def _batched_search_core(
     vectors: jnp.ndarray,   # [n, D] f32 (or int8 with scales)
     nbr: jnp.ndarray,       # [n, E] int32
-    labels: jnp.ndarray,    # [n, E, 4] int32
+    labels: jnp.ndarray | None,  # [n, E, 4] int32; None = label-ignoring (broad)
     q: jnp.ndarray,         # [B, D]
     states: jnp.ndarray,    # [B, 2] int32
     ep: jnp.ndarray,        # [B] int32
@@ -163,11 +163,16 @@ def _batched_search_core(
             cur_safe = jnp.where(live, cur, 0)
             rows_m = jnp.broadcast_to(jnp.arange(B)[:, None], (B, M))
             beam_exp_ = beam_exp_.at[rows_m, j].max(live)
-            # 2. neighbor metadata only — ids + label rectangles
+            # 2. neighbor metadata only — ids + label rectangles. Broad mode
+            # (labels=None, the constructor's label-ignoring search) skips the
+            # [B, M, E, 4] gather: all-zero rectangles + the all-zero state
+            # make every tuple pass the containment test.
             nb = jnp.where(live[:, :, None], nbr[cur_safe], -1)    # [B, M, E]
-            lb = labels[cur_safe]                                  # [B, M, E, 4]
             nb = nb.reshape(B, ME)
-            lb = lb.reshape(B, ME, 4)
+            if labels is None:
+                lb = jnp.zeros((B, ME, 4), dtype=jnp.int32)
+            else:
+                lb = labels[cur_safe].reshape(B, ME, 4)
             # 3. gather-fused label + visited test + cached-norm distance
             d_new = ops.filter_dist_gather(
                 vectors, norms_, q, nb, lb, states, visited_,
@@ -220,7 +225,10 @@ def _batched_search_core(
             beam_exp_ = beam_exp_ | (jax.nn.one_hot(j, L, dtype=bool) & live[:, None])
             # 2. gather neighbor rows
             nb = nbr[cur_safe]                          # [B, E]
-            lb = labels[cur_safe]                       # [B, E, 4]
+            if labels is None:
+                lb = jnp.zeros((B, E, 4), dtype=jnp.int32)
+            else:
+                lb = labels[cur_safe]                   # [B, E, 4]
             nb = jnp.where(live[:, None], nb, -1)
             nb_safe = jnp.clip(nb, 0, n - 1)
             cand_vecs = deq(vectors[nb_safe], nb_safe)   # [B, E, D] f32
@@ -308,3 +316,48 @@ def batched_udg_search(
         norms=norms,
     )
     return np.asarray(ids), np.asarray(d)
+
+
+def broad_batched_search(
+    table: jnp.ndarray,      # [n_pad, D] f32 full vector table
+    norms: jnp.ndarray,      # [n_pad] f32 cached ‖v‖²
+    nbr: jnp.ndarray,        # [n_pad, E] int32 broad adjacency (-1 padded)
+    q: jnp.ndarray,          # [B, D] f32 wave of inserted objects
+    ep: jnp.ndarray,         # [B] int32 entry ids (-1 = masked/padding query)
+    *,
+    k: int,
+    beam: int | None = None,
+    max_iters: int | None = None,
+    use_ref: bool = True,
+    fused: bool = True,
+    expand: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Label-ignoring batched beam search — the constructor's broad search.
+
+    The device analogue of ``udg_search(..., ignore_labels=True)`` (paper
+    §V-A): one lockstep search over a *broad adjacency* (unique neighbor ids,
+    no label rectangles — see ``repro.search.device_graph.BroadExport``)
+    shared by a whole insertion wave. ``labels=None`` in the core skips the
+    label gather entirely and substitutes all-zero rectangles + the all-zero
+    state, which every tuple passes, so no ``[n, E, 4]`` labels array ever
+    exists for the construction-time index. Returns device arrays
+    (ids [B, k] int32 with -1 padding, squared dists [B, k] f32, ascending).
+    """
+    B = q.shape[0]
+    L = beam if beam is not None else k
+    states = jnp.zeros((B, 2), dtype=jnp.int32)
+    return _batched_search_core(
+        table,
+        nbr,
+        None,
+        q,
+        states,
+        ep,
+        k=k,
+        beam=L,
+        max_iters=max_iters if max_iters is not None else 2 * L,
+        use_ref=use_ref,
+        fused=fused,
+        expand=expand,
+        norms=norms,
+    )

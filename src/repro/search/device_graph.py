@@ -147,6 +147,103 @@ def export_device_graph(
     )
 
 
+class BroadExport:
+    """Incrementally-maintained *broad* (label-ignoring) device adjacency.
+
+    The batched constructor needs the partially built index on device once
+    per insertion wave, but only for the broad construction-time search —
+    which ignores labels and collapses multi-tuples. So instead of
+    re-running the full :func:`export_device_graph` per wave (O(total
+    tuples) every time), this structure maintains the padded dense
+    ``[n_pad, E] int32`` unique-neighbor table *incrementally*: each edge
+    pair added to the host graph is folded in as it is emitted, and a wave
+    export is a zero-copy column slice.
+
+    ``max_width`` bounds the per-row degree: once a row is full, later
+    neighbors are dropped. Rows fill in discovery order, so what survives
+    is the node's own sweep-time neighborhood (diversity-PRUNEd close
+    neighbors) plus the earliest reverse edges — the connectivity-critical
+    set, same policy as ``export_device_graph`` under ``edge_capacity``.
+    Capping is what keeps the wave search's per-iteration gather narrow as
+    hub degrees grow: broad-pool recall is flat down to width ≈ Z while the
+    iteration cost scales linearly with width.
+    """
+
+    def __init__(
+        self,
+        n_pad: int,
+        *,
+        init_degree: int = 64,
+        lane: int = 32,
+        max_width: int | None = None,
+    ):
+        self._lane = lane
+        self._max_width = None
+        if max_width is not None:
+            self._max_width = ((int(max_width) + lane - 1) // lane) * lane
+        cap = max(int(init_degree), lane)
+        if self._max_width is not None:
+            cap = min(cap, self._max_width)
+        self._nbr = np.full((n_pad, cap), -1, dtype=np.int32)
+        self._deg = np.zeros(n_pad, dtype=np.int32)
+        self.max_degree = 0
+
+    def _grow(self, need: int) -> None:
+        cap = self._nbr.shape[1]
+        new_cap = max(need, cap * 2)
+        new_cap = ((new_cap + self._lane - 1) // self._lane) * self._lane
+        if self._max_width is not None:
+            new_cap = min(new_cap, self._max_width)
+        if new_cap <= cap:
+            return
+        grown = np.full((self._nbr.shape[0], new_cap), -1, dtype=np.int32)
+        grown[:, :cap] = self._nbr
+        self._nbr = grown
+
+    def add_edges(self, u: int, vs: np.ndarray) -> None:
+        """Fold the bidirectional pairs (u, v) for v in ``vs`` into the table,
+        deduplicating; full rows (``max_width``) drop further neighbors."""
+        vs = np.unique(np.asarray(vs, dtype=np.int32))
+        vs = vs[vs != u]
+        if vs.size == 0:
+            return
+        du = int(self._deg[u])
+        new = vs[~np.isin(vs, self._nbr[u, :du])]
+        if new.size == 0:
+            return
+        if du + new.size > self._nbr.shape[1]:
+            self._grow(du + int(new.size))
+        space = self._nbr.shape[1] - du
+        fwd = new[:space]
+        self._nbr[u, du : du + fwd.size] = fwd
+        self._deg[u] = du + fwd.size
+        self.max_degree = max(self.max_degree, du + int(fwd.size))
+        for v in new.tolist():
+            dv = int(self._deg[v])
+            if dv >= self._nbr.shape[1]:
+                self._grow(dv + 1)  # no-op once at max_width
+                if dv >= self._nbr.shape[1]:
+                    continue  # row full under max_width
+            # capping breaks the symmetry invariant, so membership is
+            # re-checked (rows are <= max_width wide; O(width) scan)
+            if u in self._nbr[v, :dv]:
+                continue
+            self._nbr[v, dv] = u
+            self._deg[v] = dv + 1
+            if dv + 1 > self.max_degree:
+                self.max_degree = dv + 1
+
+    def export_width(self) -> int:
+        """Current lane-aligned export width (bucketed so the wave search
+        recompiles only when the max broad degree crosses a lane multiple)."""
+        w = max(self.max_degree, 1)
+        return ((w + self._lane - 1) // self._lane) * self._lane
+
+    def view(self, width: int | None = None) -> np.ndarray:
+        """``[n_pad, width]`` int32 neighbor table (-1 padded), no copy."""
+        return self._nbr[:, : (width or self.export_width())]
+
+
 @dataclasses.dataclass
 class DeltaSegment:
     """Statically-shaped device view of the mutable delta tier.

@@ -65,15 +65,22 @@ def build_sharded_index(
     M: int = 16,
     Z: int = 128,
     K_p: int = 8,
+    build_kwargs: dict | None = None,
 ) -> ShardedIndex:
-    """Partition the database round-robin and build one UDG per shard."""
+    """Partition the database round-robin and build one UDG per shard.
+
+    ``build_kwargs`` forwards extra ``build_udg`` options — pass
+    ``UdgServeConfig.build_kwargs()`` to select the batched wave
+    constructor with shard-capacity padding for production shard sizes.
+    """
     n = vectors.shape[0]
     assert n % num_shards == 0, (n, num_shards)
     n_l = n // num_shards
     parts = [np.arange(sh, n, num_shards) for sh in range(num_shards)]
     dgs = []
     for ids in parts:
-        g, _ = build_udg(vectors[ids], s[ids], t[ids], relation, M=M, Z=Z, K_p=K_p)
+        g, _ = build_udg(vectors[ids], s[ids], t[ids], relation, M=M, Z=Z,
+                         K_p=K_p, **(build_kwargs or {}))
         dgs.append(export_device_graph(g, EntryTable(g)))
     E = max(dg.max_degree for dg in dgs)
     ux = max(dg.U_X.shape[0] for dg in dgs)

@@ -138,7 +138,13 @@ class StreamingIndex:
         self.delta_capacity = delta_capacity
         self.edge_capacity = edge_capacity
         self.policy = policy or CompactionPolicy()
-        self._build_kwargs = dict(M=M, Z=Z, K_p=K_p)
+        # pad_nodes pins the batched constructor's device-table shape to the
+        # serving capacity, so every epoch rebuild (whatever the live count)
+        # reuses one compiled wave search — the same static-shape discipline
+        # the serving step follows. build_udg's auto dispatch picks the
+        # batched wave pipeline once the live set is large enough; pass
+        # batched=True/False in build_kwargs to force a strategy.
+        self._build_kwargs = dict(M=M, Z=Z, K_p=K_p, pad_nodes=node_capacity)
         self._build_kwargs.update(build_kwargs or {})
 
         self._lock = threading.RLock()
