@@ -1,0 +1,300 @@
+"""Selectivity sweep: planner vs fixed execution strategies.
+
+Sweeps target selectivity from ~0.1% to ~90% valid and measures, per point,
+QPS + recall@10 of the three fixed strategies (``plan="graph"`` — the
+parity oracle, ``plan="wide"``, ``plan="brute"``) against the
+selectivity-aware planner (``plan="auto"``), all through
+``repro.exec.execute_batch``.
+
+The brute/graph crossover is a *hardware property* (per-row scan cost vs
+per-hop walk cost), so the benchmark first **calibrates**
+``PlannerConfig.brute_max_valid`` from two timed probes — a linear fit of
+forced-brute latency vs valid-set size against the measured graph-walk
+latency — exactly how a deployment would tune the serving thresholds. (On
+this 1-core CPU container the jnp-oracle graph walk is Python-dispatch
+bound while a brute scan is one einsum, so the calibrated crossover is far
+to the right of where a TPU's would be; the same code calibrates small
+crossovers on real accelerators.)
+
+Emits a machine-readable ``BENCH_planner.json`` at the repo root and
+enforces the acceptance gates:
+
+  * recall: planner within 0.5 pt of the ``plan="graph"`` oracle at every
+    point (in practice >=, since brute/wide rows only improve quality);
+  * QPS: planner >= ``QPS_FLOOR`` x the best *deployable* fixed strategy
+    at iso-recall (recall within 0.5 pt of the planner's) at every point —
+    i.e. no single fixed strategy dominates the planner anywhere on the
+    sweep. Deployable means one compiled program serving the whole
+    workload: the fixed brute server carries a static id capacity covering
+    any query, exactly like the planner's brute path. (A ``brute_oracle``
+    row — bespoke capacity per batch, hence a recompile per batch shape —
+    is recorded for reference but excluded from the gate.);
+  * one program: every mixed-plan batch of the sweep hits a single
+    compiled executor entry, and the planned streaming step's jit cache is
+    stable across epoch swaps (compaction rebuilds the planner state but
+    never the program).
+
+Wall-clock numbers use the jnp oracle kernels (``use_ref=True``) on this
+CPU container — interpret-mode Pallas is an emulation, not a perf signal.
+
+``--tiny`` (or ``main(tiny=True)``) shrinks everything for the CI smoke run.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, get_method, queries
+from repro.core import EntryTable
+from repro.data import recall_at_k
+from repro.exec import PlannerConfig, execute_batch, planned_exec_cache_size
+from repro.search import export_device_graph
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_planner.json"
+
+QPS_FLOOR = 0.7          # "within noise" factor for the iso-recall QPS gate
+RECALL_TOL = 0.005       # 0.5 pt
+
+
+def _timed_group(dg, qs, specs, *, beam, repeats):
+    """Measure several strategies on one query set with INTERLEAVED repeats.
+
+    Single-core CI containers drift (GC, page cache, CPU frequency) on the
+    scale of one strategy's full measurement, so back-to-back per-strategy
+    loops produce systematic 30-40% gaps between *identical* code paths.
+    Round-robin interleaving makes every comparison paired; medians then
+    drop the outlier repeats. ``specs``: {name: (plan, config)}. Returns
+    {name: (recall, qps, p50_ms)}.
+    """
+    runs = {
+        name: (lambda plan=plan, config=config: execute_batch(
+            dg, qs.vectors, qs.s_q, qs.t_q, k=10, beam=beam, use_ref=True,
+            plan=plan, config=config,
+        ))
+        for name, (plan, config) in specs.items()
+    }
+    ids = {name: run()[0] for name, run in runs.items()}  # warm up (compile)
+    for _ in range(2):
+        # untimed warm-in rounds: steady state takes a few calls to reach
+        # (XLA autotune + page cache + CPU frequency), and whoever is
+        # measured first would otherwise absorb the transient
+        for run in runs.values():
+            run()
+    lat = {name: [] for name in runs}
+    for _ in range(repeats):
+        for name, run in runs.items():
+            t0 = time.perf_counter()
+            run()
+            lat[name].append(time.perf_counter() - t0)
+    return {
+        name: (
+            float(recall_at_k(ids[name], qs)),
+            float(qs.nq / np.median(lat[name])),
+            float(np.percentile(lat[name], 50) * 1e3),
+        )
+        for name in runs
+    }
+
+
+def _timed(dg, qs, *, plan, beam, repeats, config):
+    out = _timed_group(
+        dg, qs, {"one": (plan, config)}, beam=beam, repeats=repeats
+    )
+    return out["one"]
+
+
+def _streaming_no_recompile(dim=8, n=240) -> bool:
+    """Epoch swaps must keep one compiled planned streaming program."""
+    from repro.data import make_dataset
+    from repro.stream import CompactionPolicy, StreamingIndex
+    from repro.stream.search import planned_streaming_search_core
+
+    vecs, s, t = make_dataset(n, dim, seed=17)
+    idx = StreamingIndex(
+        dim, "containment", node_capacity=256, delta_capacity=64,
+        edge_capacity=64, M=8, Z=32,
+        policy=CompactionPolicy(max_delta_fraction=0.25, min_mutations=16),
+    )
+    qv = vecs[:8]
+    s_q = np.full(8, float(s.min()))
+    t_q = np.linspace(float(np.median(t)), float(t.max()), 8)
+    for i in range(n // 2):
+        idx.insert(vecs[i], s[i], t[i])
+        idx.maybe_compact()
+    idx.search(qv, s_q, t_q, k=5, beam=32, plan="auto")
+    cache = planned_streaming_search_core._cache_size()
+    epoch = idx.epoch
+    for i in range(n // 2, n):
+        idx.insert(vecs[i], s[i], t[i])
+        idx.maybe_compact()
+    idx.search(qv, s_q, t_q, k=5, beam=32, plan="auto")
+    swapped = idx.epoch > epoch
+    return swapped and planned_streaming_search_core._cache_size() == cache
+
+
+def _calibrate(dg, qsets, n, *, beam, repeats) -> PlannerConfig:
+    """Fit the brute/graph crossover on this hardware.
+
+    Brute latency is ~affine in the valid-set size V (fit on two probe
+    points); the crossover against the measured graph-walk latency becomes
+    ``brute_max_valid``. A crossover past n means a full scan always wins
+    here (the CPU-container regime) and the planner will honestly serve
+    everything brute; on accelerator backends the fit lands in the paper's
+    selective band."""
+    mid, hi = qsets[len(qsets) // 2], qsets[-1]
+    probe = PlannerConfig()
+
+    def lat(qs, plan):
+        _, _, p50_ms = _timed(dg, qs, plan=plan, beam=beam, repeats=repeats,
+                              config=probe)
+        return p50_ms * 1e-3 / qs.nq  # median seconds per query
+
+    l_graph = lat(mid, "graph")
+    v_mid = float(mid.achieved_selectivity.mean()) * n
+    v_hi = float(hi.achieved_selectivity.mean()) * n
+    lb_mid, lb_hi = lat(mid, "brute"), lat(hi, "brute")
+    slope = (lb_hi - lb_mid) / max(v_hi - v_mid, 1.0)
+    if slope <= 0:
+        v_star = n
+    else:
+        v_star = (l_graph - (lb_mid - slope * v_mid)) / slope
+    brute_max = int(np.clip(v_star, 16, n))
+    return PlannerConfig(brute_max_valid=brute_max, wide_max_fraction=0.15)
+
+
+def main(tiny: bool = False) -> None:
+    if tiny:
+        n, dim, nq, beam, repeats = 600, 16, 16, 32, 2
+        sigmas = (0.02, 0.1, 0.5)
+        vecs, s, t = dataset("uniform", n, dim)
+        m = get_method("udg", "containment", data_key=("uniform", n, dim, 0),
+                       M=8, Z=32, K_p=4)
+    else:
+        nq, beam, repeats = 32, 64, 5
+        sigmas = (0.001, 0.005, 0.02, 0.1, 0.3, 0.6, 0.9)
+        vecs, s, t = dataset()
+        m = get_method("udg", "containment", M=16, Z=64, K_p=8)
+    dg = export_device_graph(m.g, EntryTable(m.g))
+
+    qsets = [queries(vecs, s, t, "containment", sg, nq=nq) for sg in sigmas]
+    config = _calibrate(dg, qsets, dg.n, beam=beam, repeats=repeats)
+    print(f"# calibrated brute_max_valid={config.brute_max_valid}", flush=True)
+
+    record = {
+        "bench": "planner",
+        "n": dg.n, "dim": dg.vectors.shape[1], "beam": beam, "tiny": tiny,
+        "planner_config": {
+            "buckets": config.buckets,
+            "brute_max_valid": config.brute_max_valid,
+            "wide_max_fraction": config.wide_max_fraction,
+            "wide_beam_scale": config.wide_beam_scale,
+            "wide_expand": config.wide_expand,
+        },
+        "qps_floor_factor": QPS_FLOOR,
+        "recall_tolerance": RECALL_TOL,
+        "calibrated": True,
+        "points": [],
+    }
+
+    # plan-mix pass first, bracketed by the single-program assertion: after
+    # the FIRST planner batch compiles, no later batch of the sweep —
+    # whatever its plan mix — may add a cache entry. (The forced-brute
+    # oracle probes later legitimately compile per capacity bucket, and the
+    # calibration probes may already have compiled this very signature, so
+    # the gate is "no growth", not an absolute count.)
+    mixes = []
+    cache_after_first = None
+    for qs in qsets:
+        _, _, pb = execute_batch(
+            dg, qs.vectors, qs.s_q, qs.t_q, k=10, beam=beam, use_ref=True,
+            plan="auto", config=config, return_plans=True,
+        )
+        if cache_after_first is None:
+            cache_after_first = planned_exec_cache_size()
+        mixes.append(pb.mix())
+    single_program = planned_exec_cache_size() == cache_after_first
+
+    for sigma, qs, mix in zip(sigmas, qsets, mixes):
+        # fixed strategies as DEPLOYABLE single-program servers: "brute"
+        # must carry a static id capacity covering any query (= n), exactly
+        # like the planner's brute path does; "brute_oracle" (informational,
+        # excluded from the gate) re-compiles a bespoke capacity per batch —
+        # a lower bound no single compiled program can serve. All strategies
+        # of a point are measured with interleaved repeats (paired
+        # comparison — see _timed_group).
+        res = _timed_group(
+            dg, qs,
+            {
+                "planner": ("auto", config),
+                "graph": ("graph", config),
+                "wide": ("wide", config),
+                "brute": ("auto", PlannerConfig(brute_max_valid=dg.n)),
+                "brute_oracle": ("brute", config),
+            },
+            beam=beam, repeats=repeats,
+        )
+        rec_a, qps_a, p50_a = res["planner"]
+        point = {
+            "sigma_target": sigma,
+            "sigma_achieved": round(float(qs.achieved_selectivity.mean()), 5),
+            "plan_mix": mix,
+            "strategies": {
+                name: {"qps": round(qps, 2), "recall_at_10": round(rec, 4),
+                       "p50_ms": round(p50, 3)}
+                for name, (rec, qps, p50) in res.items()
+            },
+        }
+        iso = {
+            p: v for p, v in point["strategies"].items()
+            if p not in ("planner", "brute_oracle")
+            and v["recall_at_10"] >= rec_a - RECALL_TOL
+        }
+        best_fixed = max(iso, key=lambda p: iso[p]["qps"]) if iso else None
+        point["best_fixed_at_iso_recall"] = best_fixed
+        point["planner_vs_best_fixed_qps"] = round(
+            qps_a / iso[best_fixed]["qps"], 3
+        ) if best_fixed else None
+        record["points"].append(point)
+        emit(
+            f"planner.containment.sel{sigma}",
+            1e6 / qps_a,
+            recall=round(rec_a, 4), qps=round(qps_a, 1),
+            graph_qps=point["strategies"]["graph"]["qps"],
+            mix="/".join(
+                f"{'W' if k == 'GRAPH_WIDE' else k[0]}{v}"
+                for k, v in mix.items()
+            ),
+        )
+
+    record["single_program_mixed_plans"] = bool(single_program)
+    record["streaming_no_recompile"] = bool(_streaming_no_recompile())
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
+
+    # --- acceptance gates -----------------------------------------------------
+    assert single_program, "mixed-plan batches recompiled the executor"
+    assert record["streaming_no_recompile"], "epoch swap recompiled"
+    for point in record["points"]:
+        st = point["strategies"]
+        assert st["planner"]["recall_at_10"] >= (
+            st["graph"]["recall_at_10"] - RECALL_TOL
+        ), f"planner recall below oracle at sigma={point['sigma_target']}"
+        if point["best_fixed_at_iso_recall"] is not None:
+            best = st[point["best_fixed_at_iso_recall"]]["qps"]
+            assert st["planner"]["qps"] >= QPS_FLOOR * best, (
+                f"planner QPS {st['planner']['qps']} below "
+                f"{QPS_FLOOR} x best fixed {best} at "
+                f"sigma={point['sigma_target']}"
+            )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke scale (small corpus, 3 selectivities)")
+    main(tiny=ap.parse_args().tiny)

@@ -20,6 +20,7 @@ from benchmarks import (
     bench_kp_sweep,
     bench_kernels,
     bench_batched,
+    bench_planner,
     bench_serving,
     bench_streaming,
 )
@@ -35,6 +36,7 @@ ALL = [
     ("fig8_kp_sweep", bench_kp_sweep.main),
     ("kernels", bench_kernels.main),
     ("batched_search", bench_batched.main),
+    ("query_planner", bench_planner.main),
     ("distributed_serving", bench_serving.main),
     ("streaming_index", bench_streaming.main),
 ]

@@ -1,17 +1,24 @@
-"""Temporal RAG: the paper's motivating application.
+"""Temporal RAG: the paper's motivating application, served via the planner.
 
 Documents carry validity intervals (e.g. "this fact held from 2019-03 to
 2021-07"); a diachronic question asks for passages relevant to a topic AND
 valid during the asked-about window. The retrieval layer is a UDG with the
-*overlap* predicate; the LM substrate provides the embedding stub (any of
-the 10 architectures' hidden states can be used — here a deterministic
-random projection stands in for the encoder to stay offline-friendly).
+*overlap* predicate, served through the selectivity-aware execution planner
+(``repro.exec``): each question batch is canonicalized, its valid-set size
+estimated from the rank-space histogram, and every query dispatched to the
+strategy that fits it — an exact brute scan of the few valid documents for
+a narrow historical window, the graph walk for broad ones — all inside one
+compiled program. The LM substrate provides the embedding stub (any of the
+10 architectures' hidden states can be used — here a deterministic random
+projection stands in for the encoder to stay offline-friendly).
 
     PYTHONPATH=src python examples/temporal_rag.py
 """
 import numpy as np
 
-from repro.core import build_index, search_query
+from repro.core import build_index
+from repro.exec import PLAN_NAMES, execute_batch
+from repro.search import export_device_graph
 
 # --- corpus: (text, [valid_from, valid_to]) -----------------------------------
 
@@ -38,24 +45,44 @@ def main() -> None:
     print(f"corpus: {len(docs)} timestamped documents")
 
     # index once with the overlap predicate: a doc is admissible iff its
-    # validity window intersects the question's time window
+    # validity window intersects the question's time window; the device
+    # export carries the planner state (rank-space selectivity histogram)
     graph, entry, rep = build_index(emb, start, end, "overlap", M=16, Z=64)
-    print(f"UDG(overlap) built in {rep.seconds:.1f}s")
+    dg = export_device_graph(graph, entry)
+    print(f"UDG(overlap) built in {rep.seconds:.1f}s; planner histogram "
+          f"{dg.planner.gx}x{dg.planner.gy} over {dg.planner.n} docs")
 
     questions = [
         ("what happened with rates", 0, (2019.0, 2019.5)),
         ("championship results", 2, (2021.0, 2022.0)),
         ("recent launches", 3, (2024.0, 2025.0)),
+        ("any mergers this century", 4, (2015.0, 2025.0)),   # near-unfiltered
+        ("elections in early 2015", 1, (2015.0, 2015.02)),   # narrow window
     ]
     rng = np.random.default_rng(1)
-    for text, topic_id, (t0, t1) in questions:
-        q = centers[topic_id] + 0.1 * rng.normal(size=centers.shape[1])
-        ids, dists = search_query(
-            graph, q.astype(np.float32), t0, t1, 5, 64, entry
-        )
-        print(f"\nQ: {text!r} during [{t0}, {t1}]")
-        for rank, (i, d) in enumerate(zip(ids, dists), 1):
-            ok = (end[i] >= t0) and (start[i] <= t1)
+    q = np.stack([
+        centers[topic_id] + 0.1 * rng.normal(size=centers.shape[1])
+        for _, topic_id, _ in questions
+    ]).astype(np.float32)
+    t0 = np.array([w[0] for _, _, w in questions])
+    t1 = np.array([w[1] for _, _, w in questions])
+
+    # one planned batch: the planner picks a strategy per question from the
+    # estimated number of window-admissible documents
+    ids, dists, pb = execute_batch(
+        dg, q, t0, t1, k=5, beam=64, use_ref=True, plan="auto",
+        return_plans=True,
+    )
+    print(f"batch plan mix: {pb.mix()}")
+
+    for qi, (text, _, (w0, w1)) in enumerate(questions):
+        plan = PLAN_NAMES[int(pb.plans[qi])]
+        est = f"valid-count bounds [{pb.count_lo[qi]}, {pb.count_hi[qi]}]"
+        print(f"\nQ: {text!r} during [{w0}, {w1}]  ->  plan={plan} ({est})")
+        for rank, (i, d) in enumerate(zip(ids[qi], dists[qi]), 1):
+            if i < 0:
+                continue
+            ok = (end[i] >= w0) and (start[i] <= w1)
             print(f"  {rank}. {docs[i]}  (d={d:.2f}, window-ok={ok})")
             assert ok, "retrieved a document outside the time window!"
 

@@ -1,11 +1,20 @@
-"""PreFilter baseline: enumerate the exact valid set from the interval
-attributes, then scan the valid vectors for the exact filtered top-k.
+"""PreFilter baseline: exact valid-set enumeration + brute-force scan.
 
-The paper builds a range tree for enumeration; at benchmark scale a
-vectorized endpoint test is faster in wall-clock *and* strictly harder to
-beat (it has zero enumeration overhead), so using it keeps the baseline
-honest. Returns exact results by construction — the highest-recall,
-lowest-QPS frontier point in the paper's figures."""
+Now a thin wrapper over the unified execution layer (``repro.exec``): the
+valid set is enumerated exactly by the planner's rank-space estimator
+(``SelectivityEstimator.exact_valid_ids`` — the same small-count fallback
+the ``BRUTE_VALID`` plan uses, correct at any count). The paper builds a
+range tree for enumeration; the bucketed CSR over rank space plays that
+role here with O(G log + |V|) per-query enumeration, which keeps the
+baseline honest.
+
+Scoring stays the plain diff-square scan: it is *bit-identical* to the
+ground-truth rule (``repro.data.workloads.ground_truth``), which is what
+makes this the exact-by-construction frontier point of the paper's
+figures. The kernel-scored twin of this scan — cached-norm arithmetic
+matching the graph search paths, with its f32 residue on near-ties — is
+``repro.exec.bruteforce`` and is what serving's ``BRUTE_VALID`` plan runs.
+"""
 from __future__ import annotations
 
 import time
@@ -13,7 +22,8 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.predicates import get_relation
+from repro.core.predicates import DominanceSpace, get_relation
+from repro.exec.estimator import SelectivityEstimator
 
 
 class PreFilter:
@@ -24,20 +34,26 @@ class PreFilter:
 
     def build(self, vectors: np.ndarray, s: np.ndarray, t: np.ndarray, relation: str):
         t0 = time.perf_counter()
-        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
-        self.s, self.t = np.asarray(s), np.asarray(t)
         self.rel = get_relation(relation)
-        # sorted-endpoint metadata (the analogue of the paper's range tree)
-        self.order_s = np.argsort(self.s)
-        self.order_t = np.argsort(self.t)
+        self.space = DominanceSpace.from_intervals(self.rel, s, t)
+        # rank-space CSR + histogram: the enumeration structure (the
+        # analogue of the paper's range tree)
+        self.est = SelectivityEstimator.from_space(self.space)
+        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
         self.build_seconds = time.perf_counter() - t0
-        self.index_bytes = self.order_s.nbytes + self.order_t.nbytes
+        self.index_bytes = self.est.nbytes()
 
     def search(
         self, q: np.ndarray, s_q: float, t_q: float, k: int, ef: int = 0
     ) -> Tuple[np.ndarray, np.ndarray]:
-        mask = self.rel.valid_mask(self.s, self.t, s_q, t_q)
-        ids = np.where(mask)[0]
+        state = self.space.canonicalize(*self.rel.transform_query(s_q, t_q))
+        if state is None:
+            return np.empty(0, np.int32), np.empty(0, np.float32)
+        a = int(np.searchsorted(self.space.U_X, state[0]))
+        c = int(np.searchsorted(self.space.U_Y, state[1]))
+        # ascending ids so exact-tie stable sorting reproduces the
+        # ground-truth smaller-id rule (CSR enumeration order is bucketed)
+        ids = np.sort(self.est.exact_valid_ids(a, c))
         if ids.size == 0:
             return np.empty(0, np.int32), np.empty(0, np.float32)
         diff = self.vectors[ids] - np.asarray(q, dtype=np.float32)

@@ -25,6 +25,38 @@ class UdgServeConfig:
     # build_sharded_index(..., build_kwargs=CONFIG.build_kwargs())
     build_batched: bool = True
     build_wave: int = 512          # insertion-wave width
+    # --- query planner thresholds (repro.exec) --------------------------------
+    # Per-query execution strategy from the estimated valid-set size (upper
+    # bound from the rank-space histogram, resolution planner_buckets^2):
+    #   hi <= planner_brute_max_valid          -> BRUTE_VALID (exact scan of
+    #       the enumerated valid ids; also the static id capacity of that
+    #       path, so the plan is only taken when the set provably fits)
+    #   hi <= planner_wide_fraction * n        -> GRAPH_WIDE (beam *
+    #       planner_wide_beam_scale, multi-expand planner_wide_expand)
+    #   otherwise                               -> GRAPH
+    # These defaults MUST stay numerically in sync with the PlannerConfig
+    # field defaults in repro/exec/plan.py (directly-constructed configs in
+    # tests/calibration probes must match what serving deploys).
+    planner_buckets: int = 64
+    planner_brute_max_valid: int = 256
+    planner_wide_fraction: float = 0.05
+    planner_wide_beam_scale: int = 2
+    planner_wide_expand: int = 2
+
+    def planner_config(self):
+        """The ``repro.exec.PlannerConfig`` implementing these thresholds.
+
+        Lazy import: configs must stay importable without the JAX-backed
+        serving stack (launch tooling imports them for dry-runs)."""
+        from repro.exec.plan import PlannerConfig
+
+        return PlannerConfig(
+            buckets=self.planner_buckets,
+            brute_max_valid=self.planner_brute_max_valid,
+            wide_max_fraction=self.planner_wide_fraction,
+            wide_beam_scale=self.planner_wide_beam_scale,
+            wide_expand=self.planner_wide_expand,
+        )
 
     def build_kwargs(self, pad_nodes: int | None = None) -> dict:
         """kwargs for ``build_udg`` implementing this config's strategy.

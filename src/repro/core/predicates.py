@@ -14,7 +14,7 @@ After this mapping, construction and search are relation-independent.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -36,8 +36,10 @@ class RelationMapping:
     query_map: Callable[[float, float], Tuple[float, float]]
     brute: Callable[[Array, Array, float, float], Array]
     # inverse of query_map: (x_q, y_q) -> (s_q, t_q); used by workload
-    # generation to synthesize query intervals from dominance targets.
-    query_unmap: Callable[[float, float], Tuple[float, float]] = None  # type: ignore[assignment]
+    # generation to synthesize query intervals from dominance targets. Not
+    # every relation a user registers needs one — go through
+    # ``untransform_query`` which raises a clear error when it is missing.
+    query_unmap: Optional[Callable[[float, float], Tuple[float, float]]] = None
     description: str = ""
 
     def transform_data(self, s: Array, t: Array) -> Tuple[Array, Array]:
@@ -48,6 +50,18 @@ class RelationMapping:
     def transform_query(self, s_q: float, t_q: float) -> Tuple[float, float]:
         x_q, y_q = self.query_map(float(s_q), float(t_q))
         return float(x_q), float(y_q)
+
+    def untransform_query(self, x_q, y_q):
+        """Inverse semantic mapping: dominance target (x_q, y_q) -> interval
+        (s_q, t_q). Raises ``ValueError`` when the relation has no registered
+        inverse (``query_unmap`` is optional for user-defined relations)."""
+        if self.query_unmap is None:
+            raise ValueError(
+                f"relation {self.name!r} has no inverse query mapping "
+                "(query_unmap=None); cannot convert dominance targets back "
+                "to query intervals"
+            )
+        return self.query_unmap(x_q, y_q)
 
     def valid_mask(self, s: Array, t: Array, s_q: float, t_q: float) -> Array:
         """Oracle: boolean validity per object under the original semantics."""
@@ -180,6 +194,36 @@ class DominanceSpace:
         if i >= self.U_X.shape[0]:
             return None
         return float(self.U_X[i])
+
+    # --- rank-space histogram hooks (repro.exec planner layer) ----------------
+
+    def ranks(self) -> Tuple[Array, Array]:
+        """Integer rank coordinates (indices into ``U_X``/``U_Y``) per object.
+
+        A canonical query state (a, c) given as *ranks* selects exactly
+        ``x_rank >= rank(a) and y_rank <= rank(c)`` — the integer-space form
+        of Eq. (1) used by device labels and by the selectivity estimator's
+        rank-space histogram (``repro.exec.estimator``).
+        """
+        return (
+            np.searchsorted(self.U_X, self.X).astype(np.int64),
+            np.searchsorted(self.U_Y, self.Y).astype(np.int64),
+        )
+
+
+def rank_bucket_edges(num: int, buckets: int) -> Array:
+    """Near-uniform integer bucket edges over the rank domain ``[0, num]``.
+
+    At most ``buckets`` cells; duplicate edges from tiny grids collapse.
+    Bucket ``i`` covers ranks ``[edges[i], edges[i+1])``. This is the
+    bucketing contract shared by the planner's selectivity histogram
+    (``repro.exec.estimator``) — one definition, so estimator counts and
+    any other rank-space consumer can never disagree on cell boundaries.
+    """
+    num = max(int(num), 1)
+    return np.unique(
+        np.linspace(0, num, min(int(buckets), num) + 1).astype(np.int64)
+    )
 
 
 def canonical_state_for_query(

@@ -8,6 +8,7 @@ from repro.data.synthetic import (
     make_intervals,
     make_queries_vectors,
     make_vectors,
+    validate_intervals,
 )
 from repro.data.workloads import (
     QuerySet,
@@ -26,4 +27,5 @@ __all__ = [
     "make_queries_vectors",
     "make_vectors",
     "recall_at_k",
+    "validate_intervals",
 ]

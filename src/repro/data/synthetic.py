@@ -17,6 +17,42 @@ import numpy as np
 T_DOMAIN = 1000.0  # normalized endpoint domain size T
 
 
+def validate_intervals(
+    s: np.ndarray,
+    t: np.ndarray,
+    *,
+    what: str = "intervals",
+    clamp: bool = False,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Boundary validation for closed intervals ``[s, t]``.
+
+    Every downstream layer (dominance mapping, canonical grids, device rank
+    labels) assumes finite endpoints with ``s <= t``; violations produced
+    upstream would silently corrupt the index, so they are rejected here —
+    or, with ``clamp=True``, degenerate spans are clamped to the
+    zero-length interval at ``min(s, t)``. Returns float64 ``(s, t)``.
+    """
+    s = np.atleast_1d(np.asarray(s, dtype=np.float64))
+    t = np.atleast_1d(np.asarray(t, dtype=np.float64))
+    if s.shape != t.shape:
+        raise ValueError(f"{what}: shape mismatch {s.shape} vs {t.shape}")
+    if not (np.all(np.isfinite(s)) and np.all(np.isfinite(t))):
+        raise ValueError(f"{what}: non-finite endpoints")
+    bad = s > t
+    if np.any(bad):
+        if clamp:
+            lo = np.minimum(s, t)
+            s = np.where(bad, lo, s)
+            t = np.where(bad, lo, t)
+        else:
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"{what}: {int(np.count_nonzero(bad))} degenerate span(s) "
+                f"with s > t (first at index {i}: s={s[i]!r}, t={t[i]!r})"
+            )
+    return s, t
+
+
 def make_vectors(
     n: int,
     dim: int,
@@ -119,13 +155,14 @@ def make_intervals(
         ) from None
     rng = np.random.default_rng(seed + 7919)
     s, t = fn(rng, n, T)  # type: ignore[operator]
-    assert np.all(s <= t)
+    s, t = validate_intervals(s, t, what=f"{distribution} intervals")
     # Quantize endpoints to f32-representable values so device-side (f32)
     # canonicalization is exact — label ranks then agree bit-for-bit between
-    # the host index and TPU shards.
+    # the host index and TPU shards. Rounding can reorder endpoints of
+    # near-zero-length spans, so clamp those back to degenerate intervals.
     s = s.astype(np.float32).astype(np.float64)
     t = t.astype(np.float32).astype(np.float64)
-    return np.minimum(s, t), np.maximum(s, t)
+    return validate_intervals(s, t, what=f"{distribution} intervals", clamp=True)
 
 
 def make_dataset(

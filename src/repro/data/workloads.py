@@ -20,6 +20,7 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.core.predicates import DominanceSpace, get_relation
+from repro.data.synthetic import validate_intervals
 
 
 @dataclasses.dataclass
@@ -52,6 +53,7 @@ def generate_queries(
 ) -> QuerySet:
     """Synthesize one interval per query vector at the target selectivity."""
     rel = get_relation(relation)
+    s, t = validate_intervals(s, t, what="data intervals")
     space = DominanceSpace.from_intervals(rel, s, t)
     n = space.n
     m = max(int(round(selectivity * n)), k)  # paper assumes >= k valid objects
@@ -75,7 +77,7 @@ def generate_queries(
         if suffix.shape[0] < m:
             return None
         y_q = float(np.partition(suffix, m - 1)[m - 1])
-        s_q, t_q = rel.query_unmap(x_q, y_q)
+        s_q, t_q = rel.untransform_query(x_q, y_q)
         if s_q > t_q:  # not a bona fide interval under this relation/sign
             return None
         cnt = int(np.count_nonzero(rel.valid_mask(s, t, s_q, t_q)))
@@ -113,11 +115,17 @@ def generate_queries(
         s_qs.append(res[0])
         t_qs.append(res[1])
         achieved.append(res[2])
+    # rejection sampling guarantees s_q <= t_q per draw; validate the final
+    # arrays anyway so a bad relation inverse can never leak degenerate
+    # query intervals into benchmarks or serving
+    s_arr, t_arr = validate_intervals(
+        np.asarray(s_qs), np.asarray(t_qs), what="query intervals"
+    )
     return QuerySet(
         relation=relation,
         vectors=np.asarray(query_vectors, dtype=np.float32),
-        s_q=np.asarray(s_qs),
-        t_q=np.asarray(t_qs),
+        s_q=s_arr,
+        t_q=t_arr,
         target_selectivity=selectivity,
         achieved_selectivity=np.asarray(achieved),
         k=k,

@@ -1,0 +1,45 @@
+"""Unified query execution: selectivity estimation, planning, dispatch.
+
+One layer decides *how* each query runs — graph beam search, widened beam,
+or an exact brute scan of the enumerated valid subset — from an O(1)
+bounded count over dominance rank space, and executes mixed-plan batches
+through a single compiled program (static shapes, padding-based dispatch).
+Every serving surface (``batched_udg_search``, the streaming two-tier
+search, ``StreamingServer``, the sharded ``serve`` steps) routes here; the
+``plan="graph"`` escape hatch preserves the single-strategy behavior as the
+parity oracle.
+"""
+from repro.exec.bruteforce import brute_force_topk, brute_topk_impl, effective_norms
+from repro.exec.estimator import SelectivityEstimator, count_bounds_device
+from repro.exec.plan import (
+    PLAN_NAMES,
+    PlanBatch,
+    PlannerConfig,
+    QueryPlan,
+    default_planner_config,
+    plan_queries,
+)
+from repro.exec.executor import (
+    execute_batch,
+    mask_entry_points,
+    planned_exec_cache_size,
+    planned_exec_core,
+)
+
+__all__ = [
+    "PLAN_NAMES",
+    "PlanBatch",
+    "PlannerConfig",
+    "QueryPlan",
+    "SelectivityEstimator",
+    "brute_force_topk",
+    "brute_topk_impl",
+    "count_bounds_device",
+    "default_planner_config",
+    "effective_norms",
+    "execute_batch",
+    "mask_entry_points",
+    "plan_queries",
+    "planned_exec_cache_size",
+    "planned_exec_core",
+]

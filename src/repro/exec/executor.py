@@ -1,0 +1,216 @@
+"""Selectivity-aware batched executor: one program, three strategies.
+
+``execute_batch`` is the unified query entry point: it canonicalizes the
+batch, asks the planner (``repro.exec.plan``) for a per-query strategy, and
+dispatches the whole fixed-shape batch through ONE jitted program that
+contains all three execution paths:
+
+  * the ``GRAPH`` beam search runs with entry points masked to -1 on every
+    row planned elsewhere (a masked row's beam starts empty, so the
+    ``lax.while_loop`` does zero iterations of work for it);
+  * ``GRAPH_WIDE`` is a second instantiation of the same search with the
+    widened static (beam, expand), masked the same way;
+  * ``BRUTE_VALID`` gather-scans the host-enumerated valid-id lists
+    (``[B, brute_max_valid]`` int32, -1 padded — rows planned elsewhere are
+    all padding and annihilate in-kernel);
+
+then row-selects by plan. Partitioning is by *padding* (masked entry
+points / padded id lists), never by ``lax.cond`` on traced shapes, so a
+serving step compiles exactly once and keeps that one program across
+arbitrary plan mixes and index epoch swaps — every shape is fixed by the
+index capacity and the planner config.
+
+``plan="graph"`` bypasses planning entirely and reproduces today's
+single-strategy behavior (the parity oracle); ``plan="wide"`` /
+``plan="brute"`` force a strategy for benchmarking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.exec.bruteforce import brute_topk_impl, effective_norms
+from repro.exec.plan import (
+    PlanBatch,
+    PlannerConfig,
+    QueryPlan,
+    default_planner_config,
+    plan_queries,
+)
+from repro.search.batched import _batched_search_core, prepare_states_extended
+
+PLANS = ("auto", "graph", "wide", "brute")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "beam", "wide_beam", "max_iters", "wide_max_iters",
+        "use_ref", "fused", "expand", "wide_expand",
+    ),
+)
+def planned_exec_core(
+    vectors: jnp.ndarray,    # [n, D] f32 (or int8 with scales)
+    nbr: jnp.ndarray,        # [n, E] int32
+    labels: jnp.ndarray,     # [n, E, 4] int32
+    q: jnp.ndarray,          # [B, D]
+    states: jnp.ndarray,     # [B, 2] int32
+    ep_graph: jnp.ndarray,   # [B] int32 entry ids, -1 unless plan==GRAPH
+    ep_wide: jnp.ndarray,    # [B] int32 entry ids, -1 unless plan==GRAPH_WIDE
+    bf_ids: jnp.ndarray,     # [B, V] int32 valid ids, -1 unless plan==BRUTE
+    plans: jnp.ndarray,      # [B] int32 QueryPlan values
+    *,
+    k: int,
+    beam: int,
+    wide_beam: int,
+    max_iters: int,
+    wide_max_iters: int,
+    use_ref: bool,
+    fused: bool = True,
+    expand: int = 1,
+    wide_expand: int = 1,
+    scales: jnp.ndarray | None = None,
+    norms: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All three strategies in one traced program + per-row plan select."""
+    ids_g, d_g = _batched_search_core(
+        vectors, nbr, labels, q, states, ep_graph,
+        k=k, beam=beam, max_iters=max_iters, use_ref=use_ref,
+        fused=fused, expand=expand, scales=scales, norms=norms,
+    )
+    ids_w, d_w = _batched_search_core(
+        vectors, nbr, labels, q, states, ep_wide,
+        k=k, beam=wide_beam, max_iters=wide_max_iters, use_ref=use_ref,
+        fused=fused, expand=wide_expand, scales=scales, norms=norms,
+    )
+    nrm = effective_norms(vectors, scales, norms)
+    ids_b, d_b = brute_topk_impl(
+        vectors, nrm, q.astype(jnp.float32), bf_ids,
+        k=k, use_ref=use_ref, scales=scales,
+    )
+    sel = plans[:, None]
+    ids = jnp.where(
+        sel == int(QueryPlan.GRAPH), ids_g,
+        jnp.where(sel == int(QueryPlan.GRAPH_WIDE), ids_w, ids_b),
+    )
+    d = jnp.where(
+        sel == int(QueryPlan.GRAPH), d_g,
+        jnp.where(sel == int(QueryPlan.GRAPH_WIDE), d_w, d_b),
+    )
+    return ids, d
+
+
+def planned_exec_cache_size() -> int:
+    """Number of compiled variants of the planned executor (no-recompile
+    assertions across mixed-plan batches and epoch swaps)."""
+    return planned_exec_core._cache_size()
+
+
+def _storage(dg, fused: bool):
+    """(vectors, scales, norms) device views matching ``batched_udg_search``."""
+    if dg.vec_q is not None:
+        vectors = jnp.asarray(dg.vec_q)
+        scales = jnp.asarray(dg.scales)
+    else:
+        vectors = jnp.asarray(dg.vectors)
+        scales = None
+    norms = jnp.asarray(dg.norms) if (fused and dg.norms is not None) else None
+    return vectors, scales, norms
+
+
+def mask_entry_points(
+    ep: np.ndarray, plans: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Split one entry-point vector into per-strategy padded copies."""
+    ep = np.asarray(ep, dtype=np.int32)
+    ep_graph = np.where(plans == int(QueryPlan.GRAPH), ep, -1).astype(np.int32)
+    ep_wide = np.where(
+        plans == int(QueryPlan.GRAPH_WIDE), ep, -1
+    ).astype(np.int32)
+    return ep_graph, ep_wide
+
+
+def execute_batch(
+    dg,
+    q: np.ndarray,
+    s_q: np.ndarray,
+    t_q: np.ndarray,
+    *,
+    k: int = 10,
+    beam: int = 64,
+    max_iters: Optional[int] = None,
+    use_ref: bool = False,
+    fused: bool = True,
+    expand: int = 1,
+    plan: str = "auto",
+    config: Optional[PlannerConfig] = None,
+    return_plans: bool = False,
+):
+    """Planned end-to-end batched query over a ``DeviceGraph``.
+
+    ``plan`` is one of ``"auto"`` (selectivity-aware, the default),
+    ``"graph"`` (today's single-strategy behavior — the parity oracle),
+    ``"wide"`` or ``"brute"`` (forced strategies, for benchmarking).
+    Returns ``(ids [B, k], dists [B, k])`` plus the ``PlanBatch`` when
+    ``return_plans`` is set (``None`` for the non-auto modes).
+    """
+    if plan not in PLANS:
+        raise ValueError(f"plan={plan!r} not in {PLANS}")
+    config = config or default_planner_config()
+    states, ep, invalid = prepare_states_extended(dg, s_q, t_q)
+    B = states.shape[0]
+    if plan == "auto":
+        pb = plan_queries(dg.planner, states, invalid, config=config)
+        plans, bf_ids = pb.plans, pb.bf_ids
+    elif plan == "graph":
+        pb = None
+        plans = np.full(B, int(QueryPlan.GRAPH), dtype=np.int32)
+        bf_ids = np.full((B, config.brute_max_valid), -1, dtype=np.int32)
+    elif plan == "wide":
+        pb = None
+        plans = np.full(B, int(QueryPlan.GRAPH_WIDE), dtype=np.int32)
+        bf_ids = np.full((B, config.brute_max_valid), -1, dtype=np.int32)
+    else:  # forced brute: exact valid sets of ANY size (benchmark mode) —
+        # capacity grows in power-of-two buckets, so recompiles are O(log n)
+        pb = None
+        if dg.planner is None:
+            raise ValueError("plan='brute' requires a DeviceGraph planner")
+        plans = np.full(B, int(QueryPlan.BRUTE_VALID), dtype=np.int32)
+        lists = [
+            np.empty(0, np.int32) if invalid[i]
+            else dg.planner.exact_valid_ids(int(states[i, 0]), int(states[i, 1]))
+            for i in range(B)
+        ]
+        cap = max(int(max((l.shape[0] for l in lists), default=1)), 1)
+        cap = 1 << (cap - 1).bit_length()
+        bf_ids = np.full((B, cap), -1, dtype=np.int32)
+        for i, l in enumerate(lists):
+            bf_ids[i, : l.shape[0]] = l
+    ep_graph, ep_wide = mask_entry_points(ep, plans)
+    vectors, scales, norms = _storage(dg, fused)
+    wide_beam = max(beam * config.wide_beam_scale, beam)
+    wide_expand = config.wide_expand if fused else 1
+    mi = max_iters if max_iters is not None else 2 * beam
+    # the wide path's iteration cap scales from the caller's cap by the
+    # same factor as the beam, so an explicit max_iters latency bound is
+    # honored (proportionally) on GRAPH_WIDE rows too
+    ids, d = planned_exec_core(
+        vectors, jnp.asarray(dg.nbr), jnp.asarray(dg.labels),
+        jnp.asarray(np.asarray(q, dtype=np.float32)),
+        jnp.asarray(states),
+        jnp.asarray(ep_graph), jnp.asarray(ep_wide),
+        jnp.asarray(bf_ids), jnp.asarray(plans),
+        k=k, beam=beam, wide_beam=wide_beam,
+        max_iters=mi, wide_max_iters=mi * config.wide_beam_scale,
+        use_ref=use_ref, fused=fused, expand=expand,
+        wide_expand=min(wide_expand, wide_beam),
+        scales=scales, norms=norms,
+    )
+    ids, d = np.asarray(ids), np.asarray(d)
+    if return_plans:
+        return ids, d, pb
+    return ids, d

@@ -51,13 +51,15 @@ from repro.search.device_graph import DeviceGraph
 _INF = jnp.inf
 
 
-def prepare_states(
+def prepare_states_extended(
     dg: DeviceGraph, s_q: np.ndarray, t_q: np.ndarray
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Map + canonicalize a batch of query intervals (Lemma 1, vectorized).
 
     Returns (states [B, 2] int32 rank pairs, ep [B] int32 entry ids; ep=-1
-    marks an empty valid set / no entry)."""
+    marks an empty valid set / no entry, invalid [B] bool — True where
+    canonicalization itself failed, i.e. the valid set is provably empty
+    and the clipped state rows are meaningless)."""
     rel = get_relation(dg.relation)
     s_q = np.asarray(s_q, dtype=np.float64)
     t_q = np.asarray(t_q, dtype=np.float64)
@@ -66,12 +68,20 @@ def prepare_states(
     c = np.searchsorted(dg.U_Y, y_q, side="right") - 1
     num_x = dg.U_X.shape[0]
     invalid = (a >= num_x) | (c < 0)
-    a_cl = np.clip(a, 0, num_x - 1)
+    a_cl = np.clip(a, 0, max(num_x - 1, 0))
     ep = dg.entry_node[a_cl].astype(np.int64)
     ep_y = dg.entry_y_rank[a_cl].astype(np.int64)
     ep = np.where(invalid | (ep < 0) | (ep_y > c), -1, ep)
     states = np.stack([a_cl, np.maximum(c, 0)], axis=1).astype(np.int32)
-    return states, ep.astype(np.int32)
+    return states, ep.astype(np.int32), invalid
+
+
+def prepare_states(
+    dg: DeviceGraph, s_q: np.ndarray, t_q: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Back-compat two-tuple form of :func:`prepare_states_extended`."""
+    states, ep, _ = prepare_states_extended(dg, s_q, t_q)
+    return states, ep
 
 
 @functools.partial(
@@ -284,13 +294,27 @@ def batched_udg_search(
     use_ref: bool = False,
     fused: bool = True,
     expand: int = 1,
+    plan: str = "graph",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """End-to-end batched query: canonicalize on host, search on device.
 
     Uses the graph's int8 storage (``dg.vec_q`` + ``dg.scales``, exported
     with ``quantize_int8=True``) when present, and its cached norms on the
     fused path. ``fused=False`` selects the pre-gather parity baseline
-    (dense visited, per-iteration norm recompute)."""
+    (dense visited, per-iteration norm recompute).
+
+    ``plan`` selects the execution strategy: the default ``"graph"`` is the
+    pure beam search (the planner's parity oracle); ``"auto"`` /
+    ``"wide"`` / ``"brute"`` route through the selectivity-aware executor
+    (``repro.exec.execute_batch``), which dispatches mixed-plan batches
+    through one compiled program."""
+    if plan != "graph":
+        from repro.exec import execute_batch
+
+        return execute_batch(
+            dg, q, s_q, t_q, k=k, beam=beam, max_iters=max_iters,
+            use_ref=use_ref, fused=fused, expand=expand, plan=plan,
+        )
     states, ep = prepare_states(dg, s_q, t_q)
     if dg.vec_q is not None:
         vectors = jnp.asarray(dg.vec_q)

@@ -45,6 +45,9 @@ class DeviceGraph:
                                       # search scores: dequantized if int8)
     vec_q: np.ndarray | None = None   # [n, d] int8 quantized storage
     scales: np.ndarray | None = None  # [n] f32 per-vector dequant scales
+    planner: object | None = None     # repro.exec.SelectivityEstimator —
+                                      # rank-space histogram for the query
+                                      # planner, rebuilt with each export
 
     @property
     def n(self) -> int:
@@ -79,6 +82,7 @@ def export_device_graph(
     node_capacity: int | None = None,
     edge_capacity: int | None = None,
     quantize_int8: bool = False,
+    planner_buckets: int = 64,
 ) -> DeviceGraph:
     """Pad the host adjacency into dense arrays (E = max degree, lane-aligned).
 
@@ -132,6 +136,13 @@ def export_device_graph(
         scored = np.asarray(vectors, dtype=np.float32)
     norms = np.sum(scored * scored, axis=1, dtype=np.float32)
     ent = et.device_arrays()
+    # planner state rides along with the export, like the cached norms:
+    # the selectivity estimator is built over the REAL nodes only (padding
+    # rows have no rank coordinates) and is rebuilt on every epoch swap.
+    # Lazy import: repro.exec sits above the search layer.
+    from repro.exec.estimator import SelectivityEstimator
+
+    planner = SelectivityEstimator.from_graph(g, buckets=planner_buckets)
     return DeviceGraph(
         vectors=vectors,
         nbr=nbr,
@@ -144,6 +155,7 @@ def export_device_graph(
         norms=norms,
         vec_q=vec_q,
         scales=scales,
+        planner=planner,
     )
 
 

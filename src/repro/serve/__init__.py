@@ -4,8 +4,10 @@ from repro.serve.distributed import (
     ShardedIndex,
     ShardedStreamingIndex,
     build_sharded_index,
+    make_planned_serving_step,
     make_serving_step,
     make_streaming_serving_step,
+    plan_sharded_batch,
     serve_batch,
     serve_streaming_batch,
 )
@@ -17,8 +19,10 @@ __all__ = [
     "ShardedStreamingIndex",
     "StreamingServer",
     "build_sharded_index",
+    "make_planned_serving_step",
     "make_serving_step",
     "make_streaming_serving_step",
+    "plan_sharded_batch",
     "serve_batch",
     "serve_streaming_batch",
 ]

@@ -128,6 +128,7 @@ class StreamingServer:
         beam: int = 64,
         use_ref: bool = True,
         fused: bool = True,
+        plan: str = "auto",
         timeout_s: float = 0.01,
     ):
         self.index = index
@@ -135,6 +136,9 @@ class StreamingServer:
         self.beam = beam
         self.use_ref = use_ref
         self.fused = fused
+        # execution-strategy selection per query (repro.exec planner):
+        # "auto" = selectivity-aware, "graph" = pre-planner parity oracle
+        self.plan = plan
         self.batcher = RequestBatcher(batch_size, index.dim, timeout_s=timeout_s)
         self._worker: Optional[threading.Thread] = None
         self._worker_err: Optional[BaseException] = None
@@ -161,7 +165,7 @@ class StreamingServer:
         q, s_q, t_q, req_ids, n_real = batch
         ids, d = self.index.search(
             q, s_q, t_q, k=self.k, beam=self.beam, use_ref=self.use_ref,
-            fused=self.fused,
+            fused=self.fused, plan=self.plan,
         )
         return {rid: (ids[i], d[i]) for i, rid in enumerate(req_ids[:n_real])}
 

@@ -16,6 +16,7 @@ Layout (classic shard-per-device vector search, DESIGN.md §3):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Tuple
@@ -28,6 +29,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.build import build_udg
 from repro.core.entry import EntryTable
 from repro.core.predicates import get_relation
+from repro.exec import (
+    PlannerConfig,
+    QueryPlan,
+    default_planner_config,
+    plan_queries,
+)
+from repro.exec.executor import planned_exec_core
 from repro.search.batched import _batched_search_core
 from repro.search.device_graph import export_device_graph
 from repro.distributed.compat import shard_map as _shard_map
@@ -49,6 +57,10 @@ class ShardedIndex:
     entry_y_rank: np.ndarray  # [shards, ux_max] int32
     relation: str
     n_local: int
+    # per-shard repro.exec.SelectivityEstimator (rank-space histograms for
+    # the query planner) — host-side planning state, like the norms are
+    # device-side scoring state; rebuilt whenever the shards are rebuilt
+    planners: list | None = None
 
     @property
     def num_shards(self) -> int:
@@ -82,6 +94,7 @@ def build_sharded_index(
         g, _ = build_udg(vectors[ids], s[ids], t[ids], relation, M=M, Z=Z,
                          K_p=K_p, **(build_kwargs or {}))
         dgs.append(export_device_graph(g, EntryTable(g)))
+    planners = [dg.planner for dg in dgs]
     E = max(dg.max_degree for dg in dgs)
     ux = max(dg.U_X.shape[0] for dg in dgs)
     uy = max(dg.U_Y.shape[0] for dg in dgs)
@@ -110,7 +123,7 @@ def build_sharded_index(
     return ShardedIndex(
         vectors=vec, nbr=nbr, labels=lab, norms=nrm, U_X=UX, U_Y=UY,
         num_y=num_y, entry_node=ent, entry_y_rank=enty, relation=relation,
-        n_local=n_l,
+        n_local=n_l, planners=planners,
     )
 
 
@@ -133,6 +146,69 @@ def _canonicalize_local(UX, UY, num_y, ent, enty, xq, yq):
     ep = ent[a_cl]
     ep = jnp.where(invalid | (ep < 0) | (enty[a_cl] > c), -1, ep)
     return jnp.stack([a_cl, jnp.maximum(c, 0)], axis=1), ep
+
+
+def plan_sharded_batch(
+    idx: ShardedIndex,
+    xq: np.ndarray,
+    yq: np.ndarray,
+    *,
+    config: PlannerConfig,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side per-shard planning for one query batch.
+
+    Mirrors ``_canonicalize_local`` (f32 grids, +inf padding) so the rank
+    states the planner counts with are exactly the states the device search
+    will run with, then consults each shard's rank-space histogram.
+    Returns (plans [S, B] int32, bf_ids [S, B, V] int32 — *shard-local*
+    brute-path valid ids, -1 padded).
+    """
+    if idx.planners is None:
+        raise ValueError("ShardedIndex has no planner state (planners=None)")
+    S = idx.num_shards
+    xq = np.asarray(xq, np.float32)
+    yq = np.asarray(yq, np.float32)
+    B = xq.shape[0]
+    plans = np.full((S, B), int(QueryPlan.GRAPH), dtype=np.int32)
+    bf_ids = np.full((S, B, config.brute_max_valid), -1, dtype=np.int32)
+    for sh in range(S):
+        est = idx.planners[sh]
+        a = np.searchsorted(idx.U_X[sh], xq, side="left")
+        c = np.searchsorted(idx.U_Y[sh], yq, side="right") - 1
+        c = np.minimum(c, int(idx.num_y[sh]) - 1)
+        invalid = (a >= est.num_x) | (c < 0)
+        states = np.stack(
+            [np.clip(a, 0, est.num_x - 1), np.maximum(c, 0)], axis=1
+        ).astype(np.int32)
+        pb = plan_queries(est, states, invalid, config=config)
+        plans[sh] = pb.plans
+        bf_ids[sh] = pb.bf_ids
+    return plans, bf_ids
+
+
+def _merge_across_shards(mesh, gids, d_l, *, k: int, merge: str):
+    """Cross-shard top-k merge over the ``model`` axis (inside shard_map)."""
+    if merge == "tournament":
+        # log-step pairwise merge: each hop exchanges only k entries
+        num_shards = mesh.shape["model"]
+        step = 1
+        while step < num_shards:
+            perm = [(i, i ^ step) for i in range(num_shards)]
+            o_ids = jax.lax.ppermute(gids, "model", perm)
+            o_d = jax.lax.ppermute(d_l, "model", perm)
+            cat_d = jnp.concatenate([d_l, o_d], axis=1)
+            cat_i = jnp.concatenate([gids, o_ids], axis=1)
+            nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+            d_l, gids = nd[:, :k], ni[:, :k]
+            step *= 2
+        return gids, d_l
+    all_i = jax.lax.all_gather(gids, "model", axis=1)   # [B, S, k]
+    all_d = jax.lax.all_gather(d_l, "model", axis=1)
+    B = all_i.shape[0]
+    cat_d = all_d.reshape(B, -1)
+    cat_i = all_i.reshape(B, -1)
+    nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+    return ni[:, :k], nd[:, :k]
 
 
 def make_serving_step(
@@ -185,30 +261,7 @@ def make_serving_step(
         n_l = vec.shape[0]
         gids = jnp.where(ids_l >= 0, ids_l * 1 + shard_id * n_l, -1)
         d_l = jnp.where(ids_l >= 0, d_l, jnp.inf)
-        if merge == "tournament":
-            # log-step pairwise merge: each hop exchanges only k entries
-            num_shards = mesh.shape["model"]
-            step = 1
-            while step < num_shards:
-                perm = [
-                    (i, i ^ step) for i in range(num_shards)
-                ]
-                o_ids = jax.lax.ppermute(gids, "model", perm)
-                o_d = jax.lax.ppermute(d_l, "model", perm)
-                cat_d = jnp.concatenate([d_l, o_d], axis=1)
-                cat_i = jnp.concatenate([gids, o_ids], axis=1)
-                nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
-                d_l, gids = nd[:, :k], ni[:, :k]
-                step *= 2
-        else:
-            all_i = jax.lax.all_gather(gids, "model", axis=1)   # [B, S, k]
-            all_d = jax.lax.all_gather(d_l, "model", axis=1)
-            B = all_i.shape[0]
-            cat_d = all_d.reshape(B, -1)
-            cat_i = all_i.reshape(B, -1)
-            nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
-            d_l, gids = nd[:, :k], ni[:, :k]
-        return gids, d_l
+        return _merge_across_shards(mesh, gids, d_l, k=k, merge=merge)
 
     shard_spec = P("model")
     qspec = P(batch_axes)
@@ -217,6 +270,91 @@ def make_serving_step(
         in_specs = in_specs + (shard_spec,)
     fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
     return jax.jit(fn)
+
+
+def make_planned_serving_step(
+    mesh,
+    relation: str,
+    *,
+    k: int = 10,
+    beam: int = 64,
+    max_iters: int | None = None,
+    merge: str = "all_gather",     # all_gather | tournament
+    use_ref_kernel: bool = True,
+    fused: bool = True,
+    expand: int = 1,
+    config: PlannerConfig | None = None,
+):
+    """Planner-routed variant of :func:`make_serving_step`.
+
+    Two extra query-sharded inputs carry the host planning result
+    (``plan_sharded_batch``): per-shard plans ``[S, B]`` and shard-local
+    brute-path valid ids ``[S, B, V]``. Each shard runs the three-way
+    padding-dispatched executor (``repro.exec``) and the usual cross-shard
+    top-k merge. All shapes are fixed by capacities and the planner config,
+    so one compiled program serves every plan mix.
+
+    Signature of the returned fn:
+      (vectors, nbr, labels, norms, U_X, U_Y, num_y, entry_node,
+       entry_y_rank, q, xq, yq, plans, bf_ids) -> (global_ids, dists)
+    """
+    config = config or default_planner_config()
+    max_iters = max_iters if max_iters is not None else 2 * beam
+    wide_beam = max(beam * config.wide_beam_scale, beam)
+    wide_expand = config.wide_expand if fused else 1
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def shard_fn(vec, nbr, lab, nrm, UX, UY, num_y, ent, enty, q, xq, yq,
+                 plans, bf_ids):
+        vec, nbr, lab, nrm = vec[0], nbr[0], lab[0], nrm[0]
+        UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
+        plans, bf_ids = plans[0], bf_ids[0]
+        states, ep = _canonicalize_local(UX, UY, num_y[0], ent, enty, xq, yq)
+        ep_graph = jnp.where(plans == int(QueryPlan.GRAPH), ep, -1)
+        ep_wide = jnp.where(plans == int(QueryPlan.GRAPH_WIDE), ep, -1)
+        ids_l, d_l = planned_exec_core(
+            vec, nbr, lab, q.astype(jnp.float32), states,
+            ep_graph, ep_wide, bf_ids, plans,
+            k=k, beam=beam, wide_beam=wide_beam,
+            max_iters=max_iters,
+            wide_max_iters=max_iters * config.wide_beam_scale,
+            use_ref=use_ref_kernel, fused=fused, expand=expand,
+            wide_expand=wide_expand, norms=nrm,
+        )
+        shard_id = jax.lax.axis_index("model")
+        n_l = vec.shape[0]
+        gids = jnp.where(ids_l >= 0, ids_l + shard_id * n_l, -1)
+        d_l = jnp.where(ids_l >= 0, d_l, jnp.inf)
+        return _merge_across_shards(mesh, gids, d_l, k=k, merge=merge)
+
+    shard_spec = P("model")
+    qspec = P(batch_axes)
+    # plans/bf_ids carry a leading shard dim (per-shard planning results)
+    # AND a query-batch dim sharded like q itself
+    pspec = P("model", batch_axes)
+    in_specs = (shard_spec,) * 9 + (qspec, qspec, qspec) + (pspec, pspec)
+    fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
+    return jax.jit(fn)
+
+
+# serve_batch memoizes its jitted shard_map steps here: jax.jit caches by
+# function identity, so rebuilding the closure per call would re-trace and
+# recompile every batch. Keyed by mesh identity + static step parameters
+# (PlannerConfig is frozen, hence hashable). Bounded FIFO: each entry pins
+# its mesh alive through the closure (which also keeps the id(mesh) key
+# valid), so eviction caps both compiled-program and mesh retention for
+# long-lived processes sweeping configurations.
+_STEP_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_STEP_CACHE_MAX = 16
+
+
+def _cached_step(key, make):
+    step = _STEP_CACHE.get(key)
+    if step is None:
+        step = _STEP_CACHE.setdefault(key, make())
+        while len(_STEP_CACHE) > _STEP_CACHE_MAX:
+            _STEP_CACHE.popitem(last=False)
+    return step
 
 
 def serve_batch(
@@ -229,23 +367,57 @@ def serve_batch(
     k: int = 10,
     beam: int = 64,
     merge: str = "all_gather",
+    plan: str = "auto",
+    planner_config: PlannerConfig | None = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Host entry point: run one distributed batch end-to-end.
 
-    Returned ids are ROUND-ROBIN global: original_id = local_id*shards+shard
-    is inverted here so callers see dataset ids."""
+    ``plan="auto"`` plans each (query, shard) pair from the shard's
+    rank-space histogram and serves through the planned step; ``"graph"``
+    is the pre-planner single-strategy path (parity oracle; also the
+    fallback for indexes without planner state). Returned ids are
+    ROUND-ROBIN global: original_id = local_id*shards+shard is inverted
+    here so callers see dataset ids."""
+    if plan not in ("auto", "graph"):
+        raise ValueError(f"plan={plan!r} not in ('auto', 'graph')")
     rel = get_relation(idx.relation)
     xq, yq = rel.query_map(
         np.asarray(s_q, np.float64), np.asarray(t_q, np.float64)
     )
-    step = make_serving_step(mesh, idx.relation, k=k, beam=beam, merge=merge)
-    gids, d = step(
-        idx.vectors, idx.nbr, idx.labels, idx.norms, idx.U_X, idx.U_Y,
-        idx.num_y, idx.entry_node, idx.entry_y_rank,
-        np.asarray(q, np.float32),
-        np.asarray(xq, np.float32),
-        np.asarray(yq, np.float32),
-    )
+    if plan == "auto" and idx.planners is not None:
+        config = planner_config or default_planner_config()
+        plans, bf_ids = plan_sharded_batch(
+            idx, np.asarray(xq, np.float32), np.asarray(yq, np.float32),
+            config=config,
+        )
+        step = _cached_step(
+            ("planned", id(mesh), idx.relation, k, beam, merge, config),
+            lambda: make_planned_serving_step(
+                mesh, idx.relation, k=k, beam=beam, merge=merge, config=config
+            ),
+        )
+        gids, d = step(
+            idx.vectors, idx.nbr, idx.labels, idx.norms, idx.U_X, idx.U_Y,
+            idx.num_y, idx.entry_node, idx.entry_y_rank,
+            np.asarray(q, np.float32),
+            np.asarray(xq, np.float32),
+            np.asarray(yq, np.float32),
+            plans, bf_ids,
+        )
+    else:
+        step = _cached_step(
+            ("graph", id(mesh), idx.relation, k, beam, merge),
+            lambda: make_serving_step(
+                mesh, idx.relation, k=k, beam=beam, merge=merge
+            ),
+        )
+        gids, d = step(
+            idx.vectors, idx.nbr, idx.labels, idx.norms, idx.U_X, idx.U_Y,
+            idx.num_y, idx.entry_node, idx.entry_y_rank,
+            np.asarray(q, np.float32),
+            np.asarray(xq, np.float32),
+            np.asarray(yq, np.float32),
+        )
     gids = np.asarray(gids)
     d = np.asarray(d)
     shard = gids // idx.n_local
@@ -331,12 +503,15 @@ class ShardedStreamingIndex:
 
     def search(
         self, q, s_q, t_q, *, k: int = 10, beam: int = 64,
-        use_ref: bool = True, fused: bool = True,
+        use_ref: bool = True, fused: bool = True, plan: str = "auto",
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Query every shard (one shared jit trace) and merge per-shard
-        top-k by distance. Top-k over a union = merge of per-shard top-k."""
+        top-k by distance. Top-k over a union = merge of per-shard top-k.
+        Each shard plans its own queries (selectivity differs per shard);
+        ``plan="graph"`` forces the pre-planner path everywhere."""
         per = [
-            sh.search(q, s_q, t_q, k=k, beam=beam, use_ref=use_ref, fused=fused)
+            sh.search(q, s_q, t_q, k=k, beam=beam, use_ref=use_ref,
+                      fused=fused, plan=plan)
             for sh in self.shards
         ]
         all_ids = np.concatenate([p[0] for p in per], axis=1)

@@ -10,13 +10,18 @@ from repro.stream.index import (
     CompactionReport,
     StreamingIndex,
 )
-from repro.stream.search import streaming_search_cache_size, streaming_search_core
+from repro.stream.search import (
+    planned_streaming_search_core,
+    streaming_search_cache_size,
+    streaming_search_core,
+)
 
 __all__ = [
     "CompactionPolicy",
     "CompactionReport",
     "DeltaBuffer",
     "StreamingIndex",
+    "planned_streaming_search_core",
     "query_key_state",
     "sort_key",
     "streaming_search_cache_size",

@@ -32,10 +32,19 @@ import numpy as np
 from repro.core.build import build_udg
 from repro.core.entry import EntryTable
 from repro.core.predicates import get_relation
-from repro.search.batched import prepare_states
+from repro.exec import (
+    PlannerConfig,
+    default_planner_config,
+    mask_entry_points,
+    plan_queries,
+)
+from repro.search.batched import prepare_states_extended
 from repro.search.device_graph import DeviceGraph, export_device_graph
 from repro.stream.delta import DeltaBuffer, query_key_state
-from repro.stream.search import streaming_search_core
+from repro.stream.search import (
+    planned_streaming_search_core,
+    streaming_search_core,
+)
 
 
 @dataclasses.dataclass
@@ -100,11 +109,12 @@ def _empty_device_graph(dim: int, node_capacity: int, edge_capacity: int,
 
 
 def _graph_states(dg: DeviceGraph, s_q: np.ndarray, t_q: np.ndarray):
-    """``prepare_states`` with an empty-grid guard (epoch 0)."""
+    """``prepare_states_extended`` with an empty-grid guard (epoch 0)."""
     if dg.U_X.shape[0] == 0 or dg.U_Y.shape[0] == 0:
         B = np.asarray(s_q).shape[0]
-        return np.zeros((B, 2), np.int32), np.full(B, -1, np.int32)
-    return prepare_states(dg, s_q, t_q)
+        return (np.zeros((B, 2), np.int32), np.full(B, -1, np.int32),
+                np.ones(B, bool))
+    return prepare_states_extended(dg, s_q, t_q)
 
 
 class StreamingIndex:
@@ -419,9 +429,21 @@ class StreamingIndex:
         max_iters: Optional[int] = None,
         use_ref: bool = True,
         fused: bool = True,
+        plan: str = "auto",
+        planner_config: Optional[PlannerConfig] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Two-tier search; returns (external ids [B, k], sq dists [B, k]),
-        -1 padded. A 1-D query vector is treated as a batch of one."""
+        -1 padded. A 1-D query vector is treated as a batch of one.
+
+        ``plan="auto"`` routes the graph tier through the selectivity-aware
+        executor (per-query graph / wide-beam / brute-valid, one compiled
+        program across plan mixes and epoch swaps); ``plan="graph"`` is the
+        pre-planner behavior (parity oracle); ``plan="wide"`` forces the
+        widened beam. The planner state (rank-space histogram) is rebuilt
+        with each compacted epoch; the delta tier is scanned brute-force
+        either way, so delta-resident objects never depend on the plan."""
+        if plan not in ("auto", "graph", "wide"):
+            raise ValueError(f"plan={plan!r} not in ('auto', 'graph', 'wide')")
         q = np.asarray(q, dtype=np.float32)
         single = q.ndim == 1
         if single:
@@ -453,16 +475,48 @@ class StreamingIndex:
                 )
             mut = self._dev_mut
 
-        states, ep = _graph_states(dg, s_q, t_q)
+        states, ep, invalid = _graph_states(dg, s_q, t_q)
         dstate = query_key_state(self._rel, s_q, t_q)
-        ids, d = streaming_search_core(
-            dev[0], dev[1], dev[2], *mut,
-            jnp.asarray(q), jnp.asarray(states), jnp.asarray(ep),
-            jnp.asarray(dstate),
-            k=k, beam=beam,
-            max_iters=max_iters if max_iters is not None else 2 * beam,
-            use_ref=use_ref, fused=fused, norms=dev_norms,
-        )
+        mi = max_iters if max_iters is not None else 2 * beam
+        if plan == "graph":
+            ids, d = streaming_search_core(
+                dev[0], dev[1], dev[2], *mut,
+                jnp.asarray(q), jnp.asarray(states), jnp.asarray(ep),
+                jnp.asarray(dstate),
+                k=k, beam=beam, max_iters=mi,
+                use_ref=use_ref, fused=fused, norms=dev_norms,
+            )
+        else:
+            cfg = planner_config or default_planner_config()
+            if plan == "wide":
+                # forced wide needs only the invalid mask — skip the
+                # estimator pass (and its brute-id enumeration) entirely
+                from repro.exec import QueryPlan
+
+                plans = np.where(
+                    invalid, np.int32(QueryPlan.BRUTE_VALID),
+                    np.int32(QueryPlan.GRAPH_WIDE),
+                ).astype(np.int32)
+                bf_ids = np.full(
+                    (states.shape[0], cfg.brute_max_valid), -1, np.int32
+                )
+            else:
+                pb = plan_queries(dg.planner, states, invalid, config=cfg)
+                plans, bf_ids = pb.plans, pb.bf_ids
+            ep_graph, ep_wide = mask_entry_points(ep, plans)
+            wide_beam = max(beam * cfg.wide_beam_scale, beam)
+            ids, d = planned_streaming_search_core(
+                dev[0], dev[1], dev[2], *mut,
+                jnp.asarray(q), jnp.asarray(states),
+                jnp.asarray(ep_graph), jnp.asarray(ep_wide),
+                jnp.asarray(bf_ids), jnp.asarray(plans),
+                jnp.asarray(dstate),
+                k=k, beam=beam, wide_beam=wide_beam,
+                max_iters=mi, wide_max_iters=mi * cfg.wide_beam_scale,
+                use_ref=use_ref, fused=fused,
+                wide_expand=cfg.wide_expand if fused else 1,
+                norms=dev_norms,
+            )
         ids = np.asarray(ids)
         d = np.asarray(d)
         if single:

@@ -29,6 +29,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.exec.executor import planned_exec_core
 from repro.kernels import ops
 from repro.search.batched import _batched_search_core
 
@@ -119,6 +120,69 @@ def streaming_search_core(
     )
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "beam", "wide_beam", "max_iters", "wide_max_iters",
+        "use_ref", "fused", "expand", "wide_expand",
+    ),
+)
+def planned_streaming_search_core(
+    vectors: jnp.ndarray,      # [N, d]  compacted tier (capacity-padded)
+    nbr: jnp.ndarray,          # [N, E] int32
+    labels: jnp.ndarray,       # [N, E, 4] int32
+    live: jnp.ndarray,         # [N] bool
+    ext_ids: jnp.ndarray,      # [N] int32
+    dvec: jnp.ndarray,         # [C, d]  delta tier
+    dlab: jnp.ndarray,         # [C, 4] int32
+    dids: jnp.ndarray,         # [C] int32
+    dext: jnp.ndarray,         # [C] int32
+    q: jnp.ndarray,            # [B, d]
+    states: jnp.ndarray,       # [B, 2] int32 graph-tier rank state
+    ep_graph: jnp.ndarray,     # [B] int32 entry ids (-1 unless plan GRAPH)
+    ep_wide: jnp.ndarray,      # [B] int32 entry ids (-1 unless plan WIDE)
+    bf_ids: jnp.ndarray,       # [B, V] int32 brute valid ids (-1 padded)
+    plans: jnp.ndarray,        # [B] int32 QueryPlan values
+    dstate: jnp.ndarray,       # [B, 2] int32 delta-tier float-key state
+    *,
+    k: int,
+    beam: int,
+    wide_beam: int,
+    max_iters: int,
+    wide_max_iters: int,
+    use_ref: bool,
+    fused: bool = True,
+    expand: int = 1,
+    wide_expand: int = 1,
+    norms: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Planner-routed variant of :func:`streaming_search_core`.
+
+    The graph tier runs through the three-way planned executor (graph /
+    wide / brute-valid, padding-dispatched — one compiled program for any
+    plan mix); the delta scan and tombstone-masked merge are unchanged.
+    The graph tier is asked for ``beam`` candidates (not ``k``) so that
+    tombstone masking in the merge has the same depth to draw on as the
+    unplanned path."""
+    q = q.astype(jnp.float32)
+    ids_g, d_g = planned_exec_core(
+        vectors, nbr, labels, q, states, ep_graph, ep_wide, bf_ids, plans,
+        k=beam, beam=beam, wide_beam=wide_beam,
+        max_iters=max_iters, wide_max_iters=wide_max_iters,
+        use_ref=use_ref, fused=fused, expand=expand,
+        wide_expand=wide_expand, norms=norms,
+    )
+    return two_tier_merge(
+        ids_g, d_g, live, ext_ids, q, dvec, dlab, dids, dext, dstate,
+        k=k, use_ref=use_ref, fused=fused,
+    )
+
+
 def streaming_search_cache_size() -> int:
-    """Number of compiled variants of the streaming step (epoch-swap check)."""
-    return streaming_search_core._cache_size()
+    """Number of compiled variants of the streaming steps (epoch-swap
+    check): plain + planner-routed cores combined, so the no-recompile
+    assertions cover whichever path served the queries."""
+    return (
+        streaming_search_core._cache_size()
+        + planned_streaming_search_core._cache_size()
+    )

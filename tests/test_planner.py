@@ -1,0 +1,293 @@
+"""Selectivity-aware query planner (repro.exec) + satellite regressions.
+
+Covers the ISSUE-4 acceptance criteria:
+  * estimator: histogram count bounds hold against the exact
+    ``DominanceSpace.valid_mask_state`` oracle on random states (containment
+    and overlap), within the analytic error bound (population of the two
+    boundary buckets); exact fallback enumerates the valid set verbatim;
+  * planner: mixed-plan batches execute through ONE compiled program (no
+    recompile across plan mixes or streaming epoch swaps), match the
+    ``plan="graph"`` oracle's recall, and ``plan="brute"`` is exact;
+  * canonicalization edge cases across all five relations: empty valid set
+    (query past both grids), single-point grids, and ``canonicalize``
+    returning None must yield an empty top-K, never a crash;
+  * interval validation at the data/workload boundary;
+  * ``RelationMapping.untransform_query`` raises cleanly when a relation
+    lacks an inverse.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EntryTable, build_index, get_relation
+from repro.core.predicates import RELATIONS, DominanceSpace, RelationMapping
+from repro.data import (
+    generate_queries,
+    ground_truth,
+    make_dataset,
+    make_queries_vectors,
+    recall_at_k,
+    validate_intervals,
+)
+from repro.exec import (
+    PlannerConfig,
+    QueryPlan,
+    SelectivityEstimator,
+    count_bounds_device,
+    execute_batch,
+    plan_queries,
+    planned_exec_cache_size,
+)
+from repro.search import export_device_graph
+
+RELATION_NAMES = sorted(RELATIONS)
+
+
+# --- satellite: optional query_unmap -------------------------------------------
+
+
+def test_untransform_query_roundtrip_all_relations():
+    for name in RELATION_NAMES:
+        rel = get_relation(name)
+        s_q, t_q = 12.5, 40.25
+        x_q, y_q = rel.transform_query(s_q, t_q)
+        rs, rt = rel.untransform_query(x_q, y_q)
+        assert (float(rs), float(rt)) == (s_q, t_q), name
+
+
+def test_untransform_query_raises_without_inverse():
+    rel = RelationMapping(
+        name="no_inverse",
+        data_map=lambda s, t: (s, t),
+        query_map=lambda sq, tq: (sq, tq),
+        brute=lambda s, t, sq, tq: (s >= sq) & (t <= tq),
+    )
+    assert rel.query_unmap is None
+    with pytest.raises(ValueError, match="no inverse query mapping"):
+        rel.untransform_query(0.0, 1.0)
+
+
+# --- satellite: interval validation --------------------------------------------
+
+
+def test_validate_intervals_rejects_and_clamps():
+    s = np.array([0.0, 5.0, 2.0])
+    t = np.array([1.0, 4.0, 2.0])
+    with pytest.raises(ValueError, match="degenerate"):
+        validate_intervals(s, t)
+    cs, ct = validate_intervals(s, t, clamp=True)
+    assert np.all(cs <= ct)
+    assert cs[1] == ct[1] == 4.0          # clamped to zero-length at min
+    assert (cs[2], ct[2]) == (2.0, 2.0)   # zero-length spans are legal
+    with pytest.raises(ValueError, match="non-finite"):
+        validate_intervals(np.array([0.0, np.nan]), np.array([1.0, 2.0]))
+    with pytest.raises(ValueError, match="shape"):
+        validate_intervals(np.zeros(3), np.zeros(2))
+
+
+def test_generated_data_and_queries_are_valid_intervals():
+    vecs, s, t = make_dataset(400, 8, seed=2)
+    assert np.all(s <= t)
+    qv = make_queries_vectors(8, 8, seed=3)
+    for relation in ("containment", "overlap"):
+        qs = generate_queries(qv, s, t, relation, 0.05, k=5, seed=4)
+        assert np.all(qs.s_q <= qs.t_q)
+    with pytest.raises(ValueError, match="data intervals"):
+        generate_queries(qv, t + 1.0, s, "containment", 0.05, k=5)
+
+
+# --- estimator -----------------------------------------------------------------
+
+
+def _space(relation, n=3000, seed=0):
+    _, s, t = make_dataset(n, 8, seed=seed)
+    return DominanceSpace.from_intervals(get_relation(relation), s, t)
+
+
+@pytest.mark.parametrize("relation", ["containment", "overlap"])
+def test_estimator_bounds_vs_valid_mask_state(relation):
+    space = _space(relation)
+    est = SelectivityEstimator.from_space(space, buckets=48)
+    xr, yr = space.ranks()
+    rng = np.random.default_rng(11)
+    num_x, num_y = space.U_X.shape[0], space.U_Y.shape[0]
+    for _ in range(200):
+        a = int(rng.integers(-3, num_x + 3))
+        c = int(rng.integers(-3, num_y + 3))
+        # exact oracle, evaluated through the value-space mask when the
+        # rank state is on-grid (the canonicalized case) and through the
+        # rank predicate otherwise
+        if 0 <= a < num_x and 0 <= c < num_y:
+            true = int(np.count_nonzero(
+                space.valid_mask_state(space.U_X[a], space.U_Y[c])
+            ))
+        else:
+            true = int(np.count_nonzero((xr >= a) & (yr <= c)))
+        lo, hi = est.count_bounds(np.array([a]), np.array([c]))
+        assert lo[0] <= true <= hi[0], (a, c, int(lo[0]), true, int(hi[0]))
+        # analytic error bound: at most the population of the two partial
+        # boundary buckets (one x-row, one y-column of the histogram)
+        bx = np.clip(np.searchsorted(est.edges_x, a, side="right") - 1,
+                     0, est.gx - 1)
+        by = np.clip(np.searchsorted(est.edges_y, c, side="right") - 1,
+                     0, est.gy - 1)
+        row = int(np.count_nonzero(
+            (xr >= est.edges_x[bx]) & (xr < est.edges_x[bx + 1])
+        ))
+        col = int(np.count_nonzero(
+            (yr >= est.edges_y[by]) & (yr < est.edges_y[by + 1])
+        ))
+        assert hi[0] - lo[0] <= row + col
+        # exact fallback enumerates the valid set verbatim
+        ids = est.exact_valid_ids(a, c)
+        assert ids.shape[0] == true
+        ref = np.flatnonzero((xr >= a) & (yr <= c))
+        assert np.array_equal(np.sort(ids), ref)
+
+
+def test_estimator_device_twin_matches_host():
+    space = _space("containment", n=800, seed=5)
+    est = SelectivityEstimator.from_space(space, buckets=16)
+    rng = np.random.default_rng(3)
+    a = rng.integers(-2, space.U_X.shape[0] + 2, size=64)
+    c = rng.integers(-2, space.U_Y.shape[0] + 2, size=64)
+    lo, hi = est.count_bounds(a, c)
+    dlo, dhi = count_bounds_device(*est.device_tables(), a, c)
+    assert np.array_equal(np.asarray(dlo), lo)
+    assert np.array_equal(np.asarray(dhi), hi)
+
+
+def test_estimator_single_point_and_empty_grids():
+    # single-point grids: every object at the same canonical state
+    est = SelectivityEstimator(np.zeros(7, int), np.zeros(7, int), 1, 1)
+    lo, hi = est.count_bounds(np.array([0, 1]), np.array([0, -1]))
+    assert hi[1] == 0 and lo[0] <= 7 <= hi[0]
+    assert est.exact_count(0, 0) == 7
+    assert est.exact_count(1, 0) == 0  # query past the X grid
+    # empty index (epoch-0 streaming tier)
+    empty = SelectivityEstimator(np.empty(0), np.empty(0), 0, 0)
+    lo, hi = empty.count_bounds(np.array([0]), np.array([0]))
+    assert lo[0] == hi[0] == 0
+    assert empty.exact_valid_ids(0, 0).size == 0
+
+
+# --- canonicalization edge cases (all five relations) --------------------------
+
+
+@pytest.mark.parametrize("relation", RELATION_NAMES)
+def test_canonicalize_none_and_single_point_grids(relation):
+    rel = get_relation(relation)
+    s = np.full(5, 10.0)
+    t = np.full(5, 20.0)   # identical intervals -> single-point grids
+    space = DominanceSpace.from_intervals(rel, s, t)
+    assert space.U_X.shape[0] == 1 and space.U_Y.shape[0] == 1
+    # the data's own interval canonicalizes onto the single grid point
+    st = space.canonicalize(*rel.transform_query(10.0, 20.0))
+    assert st is not None
+    assert np.count_nonzero(space.valid_mask_state(*st)) == 5
+    # a query past both grids has no canonical state (empty valid set);
+    # the planner must turn that into an empty plan, not a crash
+    bad = space.canonicalize(space.U_X[0] + 1.0, space.U_Y[0] - 1.0)
+    assert bad is None
+    est = SelectivityEstimator.from_space(space)
+    pb = plan_queries(
+        est,
+        np.zeros((2, 2), np.int32),
+        np.array([True, False]),
+        config=PlannerConfig(),
+    )
+    assert pb.plans[0] == int(QueryPlan.BRUTE_VALID)
+    assert np.all(pb.bf_ids[0] == -1) and pb.count_hi[0] == 0
+
+
+def test_planner_empty_valid_set_returns_empty_topk(planner_setup):
+    vecs, s, t, dg = planner_setup
+    # rows 1, 2: intervals no object can satisfy under containment
+    q = vecs[:3]
+    s_q = np.array([s.min(), t.max() + 5.0, 10.0])
+    t_q = np.array([t.max(), t.max() + 6.0, 9.0])  # row 2: degenerate span
+    for plan in ("auto", "graph", "wide", "brute"):
+        ids, d = execute_batch(dg, q, s_q, t_q, k=5, beam=16, use_ref=True,
+                               plan=plan)
+        assert np.all(ids[1] == -1) and np.all(ids[2] == -1), plan
+        assert np.all(np.isinf(d[1])), plan
+        assert np.any(ids[0] >= 0), plan
+
+
+# --- planned execution ---------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def planner_setup():
+    vecs, s, t = make_dataset(1500, 16, seed=0)
+    g, et, _ = build_index(vecs, s, t, "containment", M=10, Z=48, K_p=8)
+    return vecs, s, t, export_device_graph(g, et)
+
+
+def test_planned_execution_recall_and_validity(planner_setup, query_vectors):
+    vecs, s, t, dg = planner_setup
+    rel = get_relation("containment")
+    mixes = {}
+    sweeps = []
+    cache0 = planned_exec_cache_size()
+    for sigma in (0.01, 0.06, 0.4):
+        qs = ground_truth(
+            generate_queries(query_vectors, s, t, "containment", sigma,
+                             k=10, seed=13),
+            vecs, s, t,
+        )
+        auto, _, pb = execute_batch(dg, qs.vectors, qs.s_q, qs.t_q, k=10,
+                                    beam=48, use_ref=True, plan="auto",
+                                    return_plans=True)
+        sweeps.append((qs, auto))
+        for i in range(qs.nq):   # every surfaced id satisfies the predicate
+            mask = rel.valid_mask(s, t, qs.s_q[i], qs.t_q[i])
+            assert all(mask[j] for j in auto[i] if j >= 0)
+        for name, cnt in pb.mix().items():
+            mixes[name] = mixes.get(name, 0) + cnt
+    # the sweep actually exercised multiple strategies...
+    assert mixes["BRUTE_VALID"] > 0 and mixes["GRAPH"] > 0
+    # ...and every mixed-plan batch ran through ONE compiled program (the
+    # forced-brute probes below are *allowed* to compile per capacity
+    # bucket, so they run after the assertion)
+    assert planned_exec_cache_size() - cache0 == 1
+    for qs, auto in sweeps:
+        oracle, _ = execute_batch(dg, qs.vectors, qs.s_q, qs.t_q, k=10,
+                                  beam=48, use_ref=True, plan="graph")
+        brute, _ = execute_batch(dg, qs.vectors, qs.s_q, qs.t_q, k=10,
+                                 beam=48, use_ref=True, plan="brute")
+        # planner >= oracle recall (brute/wide rows only improve quality)
+        assert recall_at_k(auto, qs) >= recall_at_k(oracle, qs) - 1e-9
+        assert recall_at_k(brute, qs) == 1.0   # forced brute is exact
+
+
+def test_streaming_planned_path_no_recompile_across_epochs():
+    from repro.stream import CompactionPolicy, StreamingIndex
+    from repro.stream.search import planned_streaming_search_core
+
+    vecs, s, t = make_dataset(420, 16, seed=6)
+    idx = StreamingIndex(
+        16, "containment", node_capacity=512, delta_capacity=96,
+        edge_capacity=96, M=8, Z=32,
+        policy=CompactionPolicy(max_delta_fraction=0.2, min_mutations=24),
+    )
+    qv = make_queries_vectors(8, 16, seed=7)
+    s_q = np.full(8, s.min())
+    t_q = np.linspace(np.median(t), t.max(), 8)
+    for i in range(180):
+        idx.insert(vecs[i], s[i], t[i])
+        if i % 60 == 59:
+            idx.maybe_compact()
+    ids0, _ = idx.search(qv, s_q, t_q, k=5, beam=32, plan="auto")
+    cache = planned_streaming_search_core._cache_size()
+    epoch = idx.epoch
+    for i in range(180, 420):
+        idx.insert(vecs[i], s[i], t[i])
+        idx.maybe_compact()
+    assert idx.epoch > epoch   # planner state was rebuilt at least once
+    ids1, _ = idx.search(qv, s_q, t_q, k=5, beam=32, plan="auto")
+    gr, _ = idx.search(qv, s_q, t_q, k=5, beam=32, plan="graph")
+    assert planned_streaming_search_core._cache_size() == cache
+    # parity with the oracle path on the same epoch: same live universe,
+    # so the planner may only match or improve the exact hit set
+    live = idx.live_ids()
+    assert all(i in live for i in np.asarray(ids1).ravel() if i >= 0)
