@@ -56,7 +56,8 @@ PLANS = ("auto", "graph", "wide", "brute")
 def planned_exec_core(
     vectors: jnp.ndarray,    # [n, D] f32 (or int8 with scales)
     nbr: jnp.ndarray,        # [n, E] int32
-    labels: jnp.ndarray,     # [n, E, 4] int32
+    labels: jnp.ndarray,     # [n, E, 2] uint32 packed or [n, E, 4] int32 —
+                             # both graph strategies dispatch on the layout
     q: jnp.ndarray,          # [B, D]
     states: jnp.ndarray,     # [B, 2] int32
     ep_graph: jnp.ndarray,   # [B] int32 entry ids, -1 unless plan==GRAPH
@@ -110,18 +111,6 @@ def planned_exec_cache_size() -> int:
     return planned_exec_core._cache_size()
 
 
-def _storage(dg, fused: bool):
-    """(vectors, scales, norms) device views matching ``batched_udg_search``."""
-    if dg.vec_q is not None:
-        vectors = jnp.asarray(dg.vec_q)
-        scales = jnp.asarray(dg.scales)
-    else:
-        vectors = jnp.asarray(dg.vectors)
-        scales = None
-    norms = jnp.asarray(dg.norms) if (fused and dg.norms is not None) else None
-    return vectors, scales, norms
-
-
 def mask_entry_points(
     ep: np.ndarray, plans: np.ndarray
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -149,12 +138,16 @@ def execute_batch(
     plan: str = "auto",
     config: Optional[PlannerConfig] = None,
     return_plans: bool = False,
+    packed: bool | None = None,
 ):
     """Planned end-to-end batched query over a ``DeviceGraph``.
 
     ``plan`` is one of ``"auto"`` (selectivity-aware, the default),
     ``"graph"`` (today's single-strategy behavior — the parity oracle),
     ``"wide"`` or ``"brute"`` (forced strategies, for benchmarking).
+    ``packed`` selects the label layout for the graph strategies exactly
+    as in ``batched_udg_search`` (``None`` = packed when exported,
+    ``False`` = int32 parity oracle, ``True`` = require packed).
     Returns ``(ids [B, k], dists [B, k])`` plus the ``PlanBatch`` when
     ``return_plans`` is set (``None`` for the non-auto modes).
     """
@@ -191,15 +184,17 @@ def execute_batch(
         for i, l in enumerate(lists):
             bf_ids[i, : l.shape[0]] = l
     ep_graph, ep_wide = mask_entry_points(ep, plans)
-    vectors, scales, norms = _storage(dg, fused)
     wide_beam = max(beam * config.wide_beam_scale, beam)
     wide_expand = config.wide_expand if fused else 1
     mi = max_iters if max_iters is not None else 2 * beam
     # the wide path's iteration cap scales from the caller's cap by the
     # same factor as the beam, so an explicit max_iters latency bound is
     # honored (proportionally) on GRAPH_WIDE rows too
+    dev = dg.device()   # memoized bundle — no per-batch table re-staging
+    norms = dev.norms if fused else None
+    lab = dg.serving_labels(fused=fused, packed=packed)
     ids, d = planned_exec_core(
-        vectors, jnp.asarray(dg.nbr), jnp.asarray(dg.labels),
+        dev.table, dev.nbr, lab,
         jnp.asarray(np.asarray(q, dtype=np.float32)),
         jnp.asarray(states),
         jnp.asarray(ep_graph), jnp.asarray(ep_wide),
@@ -208,7 +203,7 @@ def execute_batch(
         max_iters=mi, wide_max_iters=mi * config.wide_beam_scale,
         use_ref=use_ref, fused=fused, expand=expand,
         wide_expand=min(wide_expand, wide_beam),
-        scales=scales, norms=norms,
+        scales=dev.scales, norms=norms,
     )
     ids, d = np.asarray(ids), np.asarray(d)
     if return_plans:

@@ -11,7 +11,7 @@ row, a ``(TE, D)`` candidate tile, ``(TE, 4)`` label rectangles, the
 ``(1, 2)`` state and the ``(TE,)`` ids. Kept as the simple baseline (delta
 scans with pre-broadcast candidates, parity tests).
 
-``filter_dist_gather_pallas`` — the *gather-fused* serving hot path. The
+``filter_dist_gather_pallas`` — the *gather-fused* path (PR 2). The
 kernel receives the full HBM-resident vector table (``memory_space=ANY``,
 never blocked into VMEM) plus scalar-prefetched candidate row ids
 (``PrefetchScalarGridSpec``), and DMAs exactly the ``TE`` needed rows per
@@ -27,10 +27,24 @@ the kernel, so visited suppression costs one VPU shift instead of a dense
 ``[B, n]`` bool round-trip. int8 tables are dequantized in VMEM right after
 the DMA via per-candidate scales.
 
+``filter_dist_gather_packed_pallas`` — the *packed-metadata superkernel*
+(the serving hot path). Same vector-row DMA pipeline, but the per-edge
+label rectangles never cross the XLA boundary at all: the ``[n, E, 2]``
+uint32 *bit-packed* label table (two 16-bit ranks per word — see
+``repro.search.device_graph.pack_labels``) stays HBM-resident
+(``memory_space=ANY``) and the kernel DMAs the ``M`` expanded nodes' label
+rows into a VMEM scratch at each query's first tile, driven by a second
+scalar-prefetch operand carrying the expanded-node ids. The dominance test
+unpacks the 16-bit ranks with a mask-and-shift and compares in-register —
+8 bytes of label traffic per edge instead of 16, and no ``[B, M·E, 4]``
+label gather in the surrounding program (asserted structurally by
+``benchmarks/bench_batched.py``).
+
 VMEM at defaults (TE=128, D<=2048 f32): 2 x 1 MiB double-buffered candidate
-scratch + 8 KiB query + ~7 KiB of per-candidate metadata tiles — well under
-the ~16 MiB budget, with headroom for the pipeline's own double-buffering
-of the blocked operands.
+scratch + 8 KiB query + ~7 KiB of per-candidate metadata tiles (+ up to
+8 KiB of packed label rows for the superkernel) — well under the ~16 MiB
+budget, with headroom for the pipeline's own double-buffering of the
+blocked operands.
 """
 from __future__ import annotations
 
@@ -104,29 +118,14 @@ def filter_dist_pallas(
     return out[:, :e]
 
 
-def _gather_kernel_body(
-    sids_ref,    # scalar prefetch: [B, Cp] int32 safe (clipped) row ids
-    table_ref,   # [n, D] HBM (ANY) — full vector table, never blocked
-    q_ref,       # (1, D)
-    lab_ref,     # (1, TE, 4) int32
-    state_ref,   # (1, 2) int32
-    ids_ref,     # (1, TE) int32 raw ids (-1 = padding/inactive)
-    norm_ref,    # (1, TE) f32 cached ‖c‖² per candidate
-    word_ref,    # (1, TE) uint32 visited word per candidate
-    scale_ref,   # (1, TE) f32 dequant scale per candidate (1.0 for f32)
-    out_ref,     # (1, TE) f32
-    vec_scratch,  # VMEM (2, TE, D) table.dtype — double-buffered row tiles
-    sem,          # DMA (2, TE)
-    *,
-    te: int,
-    tiles: int,
-):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    pos = i * tiles + j          # flat tile index in grid iteration order
+def _row_fetch_pipeline(sids_ref, table_ref, vec_scratch, sem,
+                        *, pos, total, tiles, te):
+    """Double-buffered per-row HBM→VMEM fetch, shared by both gather
+    kernels: warm tile 0 up, issue tile ``pos+1``'s fetches before tile
+    ``pos``'s compute, await tile ``pos``. Returns the scratch slot now
+    holding tile ``pos``'s rows."""
     slot = jax.lax.rem(pos, 2)
     nslot = jax.lax.rem(pos + 1, 2)
-    total = pl.num_programs(0) * tiles
 
     def row_dma(p, s, r):
         """DMA descriptor for row r of flat tile p into scratch slot s."""
@@ -155,32 +154,65 @@ def _gather_kernel_body(
         row_dma(pos, slot, r).wait()
         return 0
     jax.lax.fori_loop(0, te, wait, 0)
+    return slot
 
+
+def _masked_distance(q_ref, cand, norm_ref, scale_ref, word_ref, ids,
+                     label_ok):
+    """Shared compute epilogue: cached-norm distance off the MXU matvec,
+    in-register visited test, predication to +inf. ``label_ok`` is the
+    layout-specific dominance mask (int32 rectangles or packed words)."""
     q = q_ref[0].astype(jnp.float32)                  # [D]
-    cand = vec_scratch[slot].astype(jnp.float32)      # [TE, D]
-    lab = lab_ref[0]
-    a = state_ref[0, 0]
-    c = state_ref[0, 1]
-    ids = ids_ref[0]
     scale = scale_ref[0]
-
     cross = jax.lax.dot_general(
         cand, q[:, None], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )[:, 0] * scale                                   # dequant after the MXU
     qs = jnp.sum(q * q)
     dist = norm_ref[0] - 2.0 * cross + qs
-
     shift = (jnp.maximum(ids, 0) & 31).astype(jnp.uint32)
     seen = (jax.lax.shift_right_logical(word_ref[0], shift)
             & jnp.uint32(1)) == jnp.uint32(1)
-    ok = (
+    ok = label_ok & (ids >= 0) & ~seen
+    return jnp.where(ok, dist, jnp.inf)
+
+
+def _gather_kernel_body(
+    sids_ref,    # scalar prefetch: [B, Cp] int32 safe (clipped) row ids
+    table_ref,   # [n, D] HBM (ANY) — full vector table, never blocked
+    q_ref,       # (1, D)
+    lab_ref,     # (1, TE, 4) int32
+    state_ref,   # (1, 2) int32
+    ids_ref,     # (1, TE) int32 raw ids (-1 = padding/inactive)
+    norm_ref,    # (1, TE) f32 cached ‖c‖² per candidate
+    word_ref,    # (1, TE) uint32 visited word per candidate
+    scale_ref,   # (1, TE) f32 dequant scale per candidate (1.0 for f32)
+    out_ref,     # (1, TE) f32
+    vec_scratch,  # VMEM (2, TE, D) table.dtype — double-buffered row tiles
+    sem,          # DMA (2, TE)
+    *,
+    te: int,
+    tiles: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    pos = i * tiles + j          # flat tile index in grid iteration order
+    total = pl.num_programs(0) * tiles
+    slot = _row_fetch_pipeline(
+        sids_ref, table_ref, vec_scratch, sem,
+        pos=pos, total=total, tiles=tiles, te=te,
+    )
+    cand = vec_scratch[slot].astype(jnp.float32)      # [TE, D]
+    lab = lab_ref[0]
+    a = state_ref[0, 0]
+    c = state_ref[0, 1]
+    label_ok = (
         (lab[:, 0] <= a) & (a <= lab[:, 1])
         & (lab[:, 2] <= c) & (c <= lab[:, 3])
-        & (ids >= 0)
-        & ~seen
     )
-    out_ref[0, :] = jnp.where(ok, dist, jnp.inf)
+    out_ref[0, :] = _masked_distance(
+        q_ref, cand, norm_ref, scale_ref, word_ref, ids_ref[0], label_ok
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "te"))
@@ -237,4 +269,143 @@ def filter_dist_gather_pallas(
         out_shape=jax.ShapeDtypeStruct((b, cp), jnp.float32),
         interpret=interpret,
     )(safe_ids, table, q, labels, state, cand_ids, norms, words, scales)
+    return out[:, :c]
+
+
+def _gather_packed_kernel_body(
+    sids_ref,    # scalar prefetch: [B, Cp] int32 safe (clipped) row ids
+    cur_ref,     # scalar prefetch: [B, M] int32 safe expanded-node ids
+    table_ref,   # [n, D] HBM (ANY) — full vector table, never blocked
+    plab_ref,    # [n, E, 2] HBM (ANY) — bit-packed label rectangles
+    q_ref,       # (1, D)
+    state_ref,   # (1, 2) int32
+    ids_ref,     # (1, TE) int32 raw ids (-1 = padding/inactive)
+    norm_ref,    # (1, TE) f32 cached ‖c‖² per candidate
+    word_ref,    # (1, TE) uint32 visited word per candidate
+    scale_ref,   # (1, TE) f32 dequant scale per candidate (1.0 for f32)
+    out_ref,     # (1, TE) f32
+    vec_scratch,  # VMEM (2, TE, D) table.dtype — double-buffered row tiles
+    lab_scratch,  # VMEM (Cp, 2) uint32 — the query's M·E packed label rows
+    sem,          # DMA (2, TE)
+    lab_sem,      # DMA (M,)
+    *,
+    te: int,
+    tiles: int,
+    E: int,
+    M: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    pos = i * tiles + j          # flat tile index in grid iteration order
+    total = pl.num_programs(0) * tiles
+
+    def lab_dma(m):
+        """DMA descriptor for expanded node m's packed label row [E, 2]."""
+        idx = cur_ref[i, m]
+        return pltpu.make_async_copy(
+            plab_ref.at[idx], lab_scratch.at[pl.ds(m * E, E)], lab_sem.at[m]
+        )
+
+    @pl.when(j == 0)
+    def _labels():
+        # the query's whole [M, E, 2] metadata block lands at its first
+        # tile and persists in scratch for the remaining tiles — ~8 B/edge,
+        # so issue-and-wait (tile 0 needs the first rows immediately)
+        def start(m, _):
+            lab_dma(m).start()
+            return 0
+        jax.lax.fori_loop(0, M, start, 0)
+
+        def wait(m, _):
+            lab_dma(m).wait()
+            return 0
+        jax.lax.fori_loop(0, M, wait, 0)
+
+    slot = _row_fetch_pipeline(
+        sids_ref, table_ref, vec_scratch, sem,
+        pos=pos, total=total, tiles=tiles, te=te,
+    )
+    cand = vec_scratch[slot].astype(jnp.float32)      # [TE, D]
+    a = state_ref[0, 0]
+    c = state_ref[0, 1]
+    # dominance test on packed words: mask-and-shift out the 16-bit ranks
+    lab = lab_scratch[pl.ds(j * te, te), :]           # [TE, 2] uint32
+    mask16 = jnp.uint32(0xFFFF)
+    lo_x = (lab[:, 0] & mask16).astype(jnp.int32)
+    hi_x = (lab[:, 0] >> 16).astype(jnp.int32)
+    lo_y = (lab[:, 1] & mask16).astype(jnp.int32)
+    hi_y = (lab[:, 1] >> 16).astype(jnp.int32)
+    label_ok = (lo_x <= a) & (a <= hi_x) & (lo_y <= c) & (c <= hi_y)
+    out_ref[0, :] = _masked_distance(
+        q_ref, cand, norm_ref, scale_ref, word_ref, ids_ref[0], label_ok
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "te"))
+def filter_dist_gather_packed_pallas(
+    table: jnp.ndarray,      # [n, D] f32/bf16/int8 — full HBM table
+    plabels: jnp.ndarray,    # [n, E, 2] uint32 — full HBM packed label table
+    q: jnp.ndarray,          # [B, D]
+    cur_ids: jnp.ndarray,    # [B, M] int32 expanded beam nodes
+    cand_ids: jnp.ndarray,   # [B, M*E] int32, -1 = padding/inactive
+    state: jnp.ndarray,      # [B, 2] int32
+    norms: jnp.ndarray,      # [B, M*E] f32 gathered ‖c‖²
+    words: jnp.ndarray,      # [B, M*E] uint32 gathered visited bitmap words
+    scales: jnp.ndarray,     # [B, M*E] f32 gathered dequant scales
+    *,
+    interpret: bool = False,
+    te: int = TE,
+) -> jnp.ndarray:
+    """Packed-metadata superkernel: per-tile vector-row DMA (double
+    buffered, as in :func:`filter_dist_gather_pallas`) plus a per-query DMA
+    of the ``M`` expanded nodes' packed ``[E, 2]`` label rows — the label
+    metadata never exists as an XLA-side gathered intermediate."""
+    b, c = cand_ids.shape
+    n, d = table.shape
+    E = plabels.shape[1]
+    M = cur_ids.shape[1]
+    if M * E != c:
+        raise ValueError(f"cand_ids width {c} != M*E = {M}*{E}")
+    te = min(te, max(8, -(-c // 8) * 8))    # small fan-outs: shrink the tile
+    pc = (-c) % te
+    if pc:
+        cand_ids = jnp.pad(cand_ids, ((0, 0), (0, pc)), constant_values=-1)
+        norms = jnp.pad(norms, ((0, 0), (0, pc)))
+        words = jnp.pad(words, ((0, 0), (0, pc)))
+        scales = jnp.pad(scales, ((0, 0), (0, pc)), constant_values=1.0)
+    cp = cand_ids.shape[1]
+    tiles = cp // te
+    safe_ids = jnp.clip(cand_ids, 0, n - 1)   # DMA source rows (pad -> row 0)
+    safe_cur = jnp.clip(cur_ids, 0, n - 1)
+    grid = (b, tiles)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),                 # table
+            pl.BlockSpec(memory_space=pltpu.ANY),                 # plabels
+            pl.BlockSpec((1, d), lambda i, j, s, u: (i, 0)),      # q
+            pl.BlockSpec((1, 2), lambda i, j, s, u: (i, 0)),      # state
+            pl.BlockSpec((1, te), lambda i, j, s, u: (i, j)),     # raw ids
+            pl.BlockSpec((1, te), lambda i, j, s, u: (i, j)),     # norms
+            pl.BlockSpec((1, te), lambda i, j, s, u: (i, j)),     # words
+            pl.BlockSpec((1, te), lambda i, j, s, u: (i, j)),     # scales
+        ],
+        out_specs=pl.BlockSpec((1, te), lambda i, j, s, u: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((2, te, d), table.dtype),
+            pltpu.VMEM((cp, 2), jnp.uint32),
+            pltpu.SemaphoreType.DMA((2, te)),
+            pltpu.SemaphoreType.DMA((M,)),
+        ],
+    )
+    kernel = functools.partial(
+        _gather_packed_kernel_body, te=te, tiles=tiles, E=E, M=M)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, cp), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, safe_cur, table, plabels, q, state, cand_ids, norms, words,
+      scales)
     return out[:, :c]

@@ -12,7 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.filter_dist import filter_dist_gather_pallas, filter_dist_pallas
+from repro.kernels.beam_merge import beam_merge_jnp, beam_merge_pallas
+from repro.kernels.filter_dist import (
+    filter_dist_gather_packed_pallas,
+    filter_dist_gather_pallas,
+    filter_dist_pallas,
+)
 from repro.kernels.int8dist import int8_l2dist_pallas, quantize_int8
 from repro.kernels.l2dist import l2dist_pallas
 
@@ -80,6 +85,68 @@ def filter_dist_gather(
     )
 
 
+def filter_dist_gather_packed(
+    table: jnp.ndarray,      # [n, D] full vector table (f32 or int8)
+    plabels: jnp.ndarray,    # [n, E, 2] uint32 bit-packed label rectangles
+    norms: jnp.ndarray,      # [n] f32 cached ‖c‖² of the (dequantized) rows
+    q: jnp.ndarray,          # [B, D]
+    cur_ids: jnp.ndarray,    # [B, M] int32 expanded beam nodes
+    cand_ids: jnp.ndarray,   # [B, M*E] int32 candidate row ids (-1 = padding)
+    state: jnp.ndarray,      # [B, 2] int32
+    visited: jnp.ndarray,    # [B, ceil(n/32)] uint32 bit-packed visited set
+    *,
+    scales: jnp.ndarray | None = None,   # [n] f32 int8 dequant scales
+    use_ref: bool = False,
+) -> jnp.ndarray:
+    """Packed-metadata superkernel: gather-fused label + visited test +
+    squared distance ``[B, M·E]`` where the label metadata is DMA'd
+    in-kernel from the packed ``[n, E, 2]`` uint32 table — no XLA-side
+    label gather at all. Per-candidate host-side traffic is the same
+    12 bytes of (norm, visited word, scale) as ``filter_dist_gather``."""
+    if use_ref:
+        return ref.filter_dist_gather_packed_ref(
+            table, plabels, norms, q, cur_ids, cand_ids, state, visited,
+            scales,
+        )
+    n = table.shape[0]
+    safe = jnp.clip(cand_ids, 0, n - 1)
+    g_norms = norms[safe].astype(jnp.float32)
+    g_words = jnp.take_along_axis(visited, safe >> 5, axis=1)
+    if scales is not None:
+        g_scales = scales[safe].astype(jnp.float32)
+    else:
+        g_scales = jnp.ones_like(g_norms)
+    return filter_dist_gather_packed_pallas(
+        table, plabels, q, cur_ids, cand_ids, state, g_norms, g_words,
+        g_scales, interpret=_on_cpu(),
+    )
+
+
+def beam_merge(
+    beam_d: jnp.ndarray,     # [B, L] f32 ascending beam distances
+    beam_ids: jnp.ndarray,   # [B, L] int32 (-1 padding)
+    beam_exp: jnp.ndarray,   # [B, L] bool expanded flags
+    cand_d: jnp.ndarray,     # [B, C] f32 (+inf = dead candidate)
+    cand_ids: jnp.ndarray,   # [B, C] int32
+    *,
+    n: int,
+    use_ref: bool = False,
+):
+    """Deduplicating top-L beam merge — ``(new_ids, new_d, new_exp, keep)``.
+
+    ``use_ref=True`` (and the CPU backend) run the pure-jnp formulation
+    (matrix dedup + ``lax.top_k``); TPU runs the Pallas bitonic
+    sort-and-merge network. Both are pinned bitwise — including exact
+    distance ties — to the stable-``lax.sort`` oracle
+    ``ref.beam_merge_ref`` in ``tests/test_kernels.py``, so path choice
+    never changes results."""
+    if use_ref or _on_cpu():
+        return beam_merge_jnp(
+            beam_d, beam_ids, beam_exp, cand_d, cand_ids, n=n)
+    return beam_merge_pallas(
+        beam_d, beam_ids, beam_exp, cand_d, cand_ids, n=n)
+
+
 def int8_l2dist(
     q: jnp.ndarray, c_q: jnp.ndarray, c_scale: jnp.ndarray, *, use_ref: bool = False
 ) -> jnp.ndarray:
@@ -90,8 +157,10 @@ def int8_l2dist(
 
 
 __all__ = [
+    "beam_merge",
     "filter_dist",
     "filter_dist_gather",
+    "filter_dist_gather_packed",
     "int8_l2dist",
     "l2dist",
     "quantize_int8",

@@ -93,6 +93,86 @@ def filter_dist_gather_ref(
     return jnp.where(ok, dist, INF)
 
 
+def unpack_labels_jnp(plabels: jnp.ndarray) -> jnp.ndarray:
+    """Packed uint32 word pairs ``[..., 2]`` -> int32 rectangles
+    ``[..., 4]`` (l, r, b, e) — the traced twin of
+    ``repro.search.device_graph.unpack_labels``; the single definition of
+    the word layout on the jnp side (kernel oracle + serving steps)."""
+    mask = jnp.uint32(0xFFFF)
+    w0 = plabels[..., 0]
+    w1 = plabels[..., 1]
+    return jnp.stack(
+        [
+            (w0 & mask).astype(jnp.int32),
+            (w0 >> 16).astype(jnp.int32),
+            (w1 & mask).astype(jnp.int32),
+            (w1 >> 16).astype(jnp.int32),
+        ],
+        axis=-1,
+    )
+
+
+def filter_dist_gather_packed_ref(
+    table: jnp.ndarray,       # [n, D] full vector table (f32 or int8)
+    plabels: jnp.ndarray,     # [n, E, 2] uint32 bit-packed label rectangles
+    norms: jnp.ndarray,       # [n] f32 cached ‖c‖²
+    q: jnp.ndarray,           # [B, D] query vectors
+    cur_ids: jnp.ndarray,     # [B, M] int32 expanded beam nodes (label rows)
+    cand_ids: jnp.ndarray,    # [B, M*E] int32 candidate row ids (-1 = padding)
+    state: jnp.ndarray,       # [B, 2] int32 canonical rank state (a, c)
+    visited: jnp.ndarray,     # [B, ceil(n/32)] uint32 bit-packed visited set
+    scales: jnp.ndarray | None = None,   # [n] f32 int8 dequant scales
+) -> jnp.ndarray:
+    """Oracle for the packed-metadata superkernel: gathers the packed label
+    rows of the ``M`` expanded nodes itself (the ``[B, M·E, 2]``
+    intermediate the Pallas kernel avoids by DMAing label rows in-kernel),
+    unpacks the 16-bit ranks, and reuses the gather-kernel oracle so the
+    distance / visited arithmetic is bit-identical to the int32 path."""
+    n = table.shape[0]
+    B, M = cur_ids.shape
+    E = plabels.shape[1]
+    rows = plabels[jnp.clip(cur_ids, 0, n - 1)]       # [B, M, E, 2]
+    labels = unpack_labels_jnp(rows.reshape(B, M * E, 2))
+    return filter_dist_gather_ref(
+        table, norms, q, cand_ids, labels, state, visited, scales
+    )
+
+
+def beam_merge_ref(
+    beam_d: jnp.ndarray,     # [B, L] f32 ascending beam distances
+    beam_ids: jnp.ndarray,   # [B, L] int32 (-1 padding)
+    beam_exp: jnp.ndarray,   # [B, L] bool expanded flags
+    cand_d: jnp.ndarray,     # [B, C] f32 (+inf = dead candidate)
+    cand_ids: jnp.ndarray,   # [B, C] int32
+    *,
+    n: int,
+):
+    """Stable-``lax.sort`` oracle for the top-L beam merge.
+
+    Semantics: suppress every candidate whose id already appeared on an
+    earlier *finite* candidate (keep-first), then stable-sort the
+    ``[beam, candidates]`` concat by distance and keep the best L — ties
+    resolve by concat position (beam first, then candidate arrival order).
+    ``beam_merge_jnp`` (top_k) and ``beam_merge_pallas`` (bitonic network)
+    must match this bitwise; pinned in ``tests/test_kernels.py``.
+    Returns ``(new_ids, new_d, new_exp, keep)``.
+    """
+    from repro.kernels.beam_merge import dedup_mask
+
+    B, L = beam_d.shape
+    C = cand_d.shape[1]
+    dup = dedup_mask(cand_d, cand_ids, n)
+    d_dd = jnp.where(dup, INF, cand_d)
+    keep = jnp.isfinite(d_dd)
+    all_d = jnp.concatenate([beam_d, d_dd], axis=1)
+    all_ids = jnp.concatenate([beam_ids, cand_ids], axis=1)
+    all_exp = jnp.concatenate([beam_exp, ~keep], axis=1)
+    sd, si, se = jax.lax.sort(
+        (all_d, all_ids, all_exp), dimension=1, num_keys=1, is_stable=True
+    )
+    return si[:, :L], sd[:, :L], se[:, :L], keep
+
+
 def int8_l2dist_ref(
     q: jnp.ndarray,        # [Bq, D] f32 queries
     c_q: jnp.ndarray,      # [Bc, D] int8 quantized candidates

@@ -340,7 +340,10 @@ def run_udg_serving_cell(
         args = (
             sds((shards, n_l, d), vdt),          # vectors
             sds((shards, n_l, E), i32),          # nbr
-            sds((shards, n_l, E, 4), i32),       # labels
+            # bit-packed labels: shard-local grids hold <= n_l = 2^16
+            # distinct values, so the packed layout is guaranteed at this
+            # cell size (int32 fallback only exists for larger grids)
+            sds((shards, n_l, E, 2), jnp.uint32),
             sds((shards, n_l), f32),             # norms (cached ‖v‖²)
             sds((shards, ux), f32),              # U_X
             sds((shards, ux), f32),              # U_Y

@@ -1,5 +1,12 @@
 """Batched, jittable UDG search — the TPU-native serving path."""
-from repro.search.device_graph import BroadExport, DeviceGraph, export_device_graph
+from repro.search.device_graph import (
+    BroadExport,
+    DeviceGraph,
+    DeviceIndex,
+    export_device_graph,
+    pack_labels,
+    unpack_labels,
+)
 from repro.search.batched import (
     batched_udg_search,
     broad_batched_search,
@@ -9,8 +16,11 @@ from repro.search.batched import (
 __all__ = [
     "BroadExport",
     "DeviceGraph",
+    "DeviceIndex",
     "batched_udg_search",
     "broad_batched_search",
     "export_device_graph",
+    "pack_labels",
     "prepare_states",
+    "unpack_labels",
 ]

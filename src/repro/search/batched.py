@@ -2,28 +2,46 @@
 
 Every query in the batch advances one *step* per iteration of a
 ``lax.while_loop``; finished queries no-op behind masks until the whole
-batch terminates. Per iteration and per query the fused path (default):
+batch terminates. Per iteration and per query the packed-metadata
+superkernel path (the default — selected whenever the ``DeviceGraph``
+carries bit-packed ``[n, E, 2]`` uint32 label rectangles):
 
   1. select the best ``expand`` (M ≥ 1) unexpanded beam entries (fixed-size
-     beam = pool+ann) — multi-expand amortizes the while-loop/sort overhead
-     across M beam expansions and cuts iteration count for wide beams;
-  2. read their padded neighbor ids/label rows ([B, M*E] int32 — metadata
-     only, no vectors);
-  3. gather-fused label test + visited test + distance
-     (``ops.filter_dist_gather``): the kernel DMAs exactly the needed vector
-     rows from the HBM-resident table (scalar-prefetched ids, double-
-     buffered VMEM tiles) and computes ``‖c‖² − 2·q·c + ‖q‖²`` from cached
-     per-node norms — the ``[B, E, D]`` XLA-gathered intermediate of the
-     unfused path never materializes;
-  4. suppress intra-batch duplicates, set the surviving candidates' bits in
-     a bit-packed ``[B, ceil(n/32)]`` uint32 visited bitmap (the kernel
-     already suppressed previously-visited candidates in-kernel);
-  5. merge candidates into the beam with a stable sort, keep the best L.
+     beam = pool+ann) — multi-expand amortizes the while-loop/merge
+     overhead across M beam expansions and cuts iteration count for wide
+     beams;
+  2. read their padded neighbor ids ([B, M*E] int32 — the only per-edge
+     metadata that crosses the XLA boundary);
+  3. packed-metadata superkernel (``ops.filter_dist_gather_packed``): the
+     kernel DMAs the needed vector rows *and* the M expanded nodes' packed
+     label rows from the HBM-resident tables (scalar-prefetched ids,
+     double-buffered VMEM tiles), unpacks the 16-bit ranks with a
+     mask-and-shift, applies the dominance + visited tests, and computes
+     ``‖c‖² − 2·q·c + ‖q‖²`` from cached per-node norms — neither the
+     ``[B, E, D]`` candidate tensor nor the ``[B, M·E, 4]`` label gather
+     of the older paths ever materializes;
+  4. deduplicate + merge with ``ops.beam_merge``: an ``[M·E, M·E]``
+     predicated compare suppresses intra-iteration duplicates (no argsort)
+     and a top-L selection (``lax.top_k`` on CPU/jnp, a bitonic
+     sort-and-merge network on TPU) replaces the full stable
+     ``lax.sort`` over ``[B, L + M·E]`` triples;
+  5. set the kept candidates' bits in the bit-packed ``[B, ceil(n/32)]``
+     uint32 visited bitmap (the kernel already suppressed
+     previously-visited candidates in-kernel).
 
-``fused=False`` keeps the original loop — XLA gather of a dense ``[B, E, D]``
-candidate tensor, per-iteration ``sum(c*c)`` recompute, dense ``[B, n]`` bool
-visited — as the parity baseline (``tests/test_batched_search.py`` pins the
-two paths to identical results).
+With int32 ``[n, E, 4]`` labels the fused loop keeps the PR 2 structure —
+XLA-side label gather, argsort dedup, stable ``lax.sort`` merge — as the
+packed path's parity oracle (``batched_udg_search(packed=False)``).
+``fused=False`` keeps the original pre-gather loop — XLA gather of a dense
+``[B, E, D]`` candidate tensor, per-iteration ``sum(c*c)`` recompute, dense
+``[B, n]`` bool visited — as the deepest baseline
+(``tests/test_batched_search.py`` pins the paths to identical results).
+
+Tie note: the packed merge resolves exact distance ties in candidate
+arrival order, the legacy merge in candidate id order (it id-sorts for the
+argsort dedup). Same-id duplicates always carry bit-equal distances, so
+results can differ only when two *distinct* rows sit at exactly the same
+squared distance from the query.
 
 Termination — "no unexpanded entry within the beam" — is the batched
 equivalent of Alg. 2 line 7 (the best pool entry being worse than the worst
@@ -117,6 +135,11 @@ def _batched_search_core(
         raise ValueError("multi-expand (expand > 1) requires fused=True")
     if not 1 <= expand <= beam:
         raise ValueError(f"expand={expand} must be in [1, beam={beam}]")
+    if not fused and labels is not None and labels.shape[-1] == 2:
+        raise ValueError(
+            "the unfused baseline needs the int32 [n, E, 4] label layout "
+            "(pass DeviceGraph.labels_i32(), not the packed words)"
+        )
 
     def deq(rows, idx):
         """Gathered candidate rows in f32 (dequantizing int8 storage)."""
@@ -139,6 +162,11 @@ def _batched_search_core(
         _, beam_d_, beam_exp_, _, it = carry
         active = jnp.any(~beam_exp_ & jnp.isfinite(beam_d_))
         return jnp.logical_and(it < max_iters, active)
+
+    # label layout is static at trace time: [n, E, 2] uint32 = bit-packed
+    # (superkernel + beam_merge pipeline), [n, E, 4] int32 = legacy layout
+    # (the parity oracle), None = broad/label-ignoring mode
+    packed = labels is not None and labels.shape[-1] == 2
 
     if fused:
         M = expand
@@ -173,12 +201,39 @@ def _batched_search_core(
             cur_safe = jnp.where(live, cur, 0)
             rows_m = jnp.broadcast_to(jnp.arange(B)[:, None], (B, M))
             beam_exp_ = beam_exp_.at[rows_m, j].max(live)
-            # 2. neighbor metadata only — ids + label rectangles. Broad mode
-            # (labels=None, the constructor's label-ignoring search) skips the
-            # [B, M, E, 4] gather: all-zero rectangles + the all-zero state
+            # 2. neighbor ids — with packed labels the ONLY per-edge
+            # metadata gathered on the XLA side. Broad mode (labels=None,
+            # the constructor's label-ignoring search) skips the label
+            # gather entirely: all-zero rectangles + the all-zero state
             # make every tuple pass the containment test.
             nb = jnp.where(live[:, :, None], nbr[cur_safe], -1)    # [B, M, E]
             nb = nb.reshape(B, ME)
+            if packed:
+                # 3. packed superkernel: in-kernel DMA of the vector rows
+                # AND the M expanded nodes' packed label rows; dominance +
+                # visited tests and cached-norm distance fused in-kernel
+                d_new = ops.filter_dist_gather_packed(
+                    vectors, labels, norms_, q, cur_safe, nb, states,
+                    visited_, scales=scales, use_ref=use_ref,
+                )
+                # 4. dedup + top-L merge primitive (no argsort, no full
+                # stable sort); `keep` = deduped survivors, in nb order
+                beam_ids_, beam_d_, beam_exp_, keep = ops.beam_merge(
+                    beam_d_, beam_ids_, beam_exp_, d_new, nb,
+                    n=n, use_ref=use_ref,
+                )
+                # 5. bitmap update: kept candidates are deduped and
+                # previously unvisited, so each (query, bit) lands at most
+                # once — scatter-add == scatter-or
+                ids_safe = jnp.clip(nb, 0, n - 1)
+                rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, ME))
+                bits = jnp.where(
+                    keep,
+                    jnp.uint32(1) << (ids_safe & 31).astype(jnp.uint32),
+                    jnp.uint32(0),
+                )
+                visited_ = visited_.at[rows, ids_safe >> 5].add(bits)
+                return (beam_ids_, beam_d_, beam_exp_, visited_, it + 1)
             if labels is None:
                 lb = jnp.zeros((B, ME, 4), dtype=jnp.int32)
             else:
@@ -295,13 +350,20 @@ def batched_udg_search(
     fused: bool = True,
     expand: int = 1,
     plan: str = "graph",
+    packed: bool | None = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """End-to-end batched query: canonicalize on host, search on device.
 
-    Uses the graph's int8 storage (``dg.vec_q`` + ``dg.scales``, exported
-    with ``quantize_int8=True``) when present, and its cached norms on the
-    fused path. ``fused=False`` selects the pre-gather parity baseline
-    (dense visited, per-iteration norm recompute).
+    Device arrays come from the graph's memoized ``dg.device()`` bundle —
+    built once per export instead of re-staging the full table per batch —
+    including int8 storage (``dg.vec_q`` + ``dg.scales``, exported with
+    ``quantize_int8=True``) when present and the cached norms on the fused
+    path. ``packed`` selects the label layout: ``None`` (default) uses the
+    packed-metadata superkernel whenever the export carries packed labels;
+    ``False`` forces the legacy int32 fused loop (the packed path's parity
+    oracle); ``True`` requires packed labels (raises if the export fell
+    back). ``fused=False`` selects the deepest pre-gather baseline (dense
+    visited, per-iteration norm recompute).
 
     ``plan`` selects the execution strategy: the default ``"graph"`` is the
     pure beam search (the planner's parity oracle); ``"auto"`` /
@@ -314,19 +376,16 @@ def batched_udg_search(
         return execute_batch(
             dg, q, s_q, t_q, k=k, beam=beam, max_iters=max_iters,
             use_ref=use_ref, fused=fused, expand=expand, plan=plan,
+            packed=packed,
         )
     states, ep = prepare_states(dg, s_q, t_q)
-    if dg.vec_q is not None:
-        vectors = jnp.asarray(dg.vec_q)
-        scales = jnp.asarray(dg.scales)
-    else:
-        vectors = jnp.asarray(dg.vectors)
-        scales = None
-    norms = jnp.asarray(dg.norms) if (fused and dg.norms is not None) else None
+    dev = dg.device()
+    labels = dg.serving_labels(fused=fused, packed=packed)
+    norms = dev.norms if fused else None
     ids, d = _batched_search_core(
-        vectors,
-        jnp.asarray(dg.nbr),
-        jnp.asarray(dg.labels),
+        dev.table,
+        dev.nbr,
+        labels,
         jnp.asarray(np.asarray(q, dtype=np.float32)),
         jnp.asarray(states),
         jnp.asarray(ep),
@@ -336,7 +395,7 @@ def batched_udg_search(
         use_ref=use_ref,
         fused=fused,
         expand=expand,
-        scales=scales,
+        scales=dev.scales,
         norms=norms,
     )
     return np.asarray(ids), np.asarray(d)

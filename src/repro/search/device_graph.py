@@ -3,16 +3,35 @@
 TPUs want dense, statically-shaped gathers, so the host adjacency (ragged
 lists of labeled tuples) is exported as
 
-  nbr    [n, E] int32   neighbor id per tuple slot (-1 = padding)
-  labels [n, E, 4] int32 canonical rank rectangles (l, r, b, e)
+  nbr     [n, E] int32       neighbor id per tuple slot (-1 = padding)
+  plabels [n, E, 2] uint32   bit-packed canonical rank rectangles — the
+                             default layout: (l, r) in the two 16-bit
+                             halves of word 0, (b, e) in word 1
+  labels  [n, E, 4] int32    the unpacked legacy layout, kept only when the
+                             grid exceeds the 16-bit rank budget (or the
+                             caller forces ``packed_labels=False``)
 
-with E = max labeled degree rounded up to a lane multiple. Entry lookup and
-canonicalization grids ride along so a query can be served end-to-end on
-device, as do per-node squared norms (cached once here so the gather-fused
-kernel never re-reduces ``sum(c*c)``) and — with ``quantize_int8=True`` —
-int8 storage + per-vector scales for the bandwidth-saving distance path.
-The static node capacity also fixes the width of the search loop's
-bit-packed visited bitmap (``visited_words``).
+with E = max labeled degree rounded up to a lane multiple. Canonical ranks
+are indices into the ``U_X``/``U_Y`` grids, so a grid of at most 2^16
+distinct values per axis fits two ranks per 32-bit word — the label table
+(the single largest index component: 16 B/edge unpacked, ~11x the int8
+vector table at d=32) halves at rest and in flight, and streaming epoch
+snapshots shrink by the same factor. ``pack_labels``/``unpack_labels`` are
+the bijection; ``export_device_graph`` guards the rank width and falls
+back to the int32 layout with a warning when a grid overflows.
+
+Entry lookup and canonicalization grids ride along so a query can be
+served end-to-end on device, as do per-node squared norms (cached once
+here so the gather-fused kernel never re-reduces ``sum(c*c)``) and — with
+``quantize_int8=True`` — int8 storage + per-vector scales for the
+bandwidth-saving distance path. The static node capacity also fixes the
+width of the search loop's bit-packed visited bitmap (``visited_words``).
+
+``DeviceGraph.device()`` memoizes the jnp views of every search-visible
+array (table, norms, scales, nbr, labels) so serving entry points stop
+re-staging multi-megabyte host buffers on every batch; the cache dies with
+the export (streaming epoch swaps publish a fresh ``DeviceGraph``) and can
+be dropped explicitly with ``invalidate_device()``.
 
 For the streaming subsystem (repro.stream) the export additionally supports
 *fixed capacities*: node and edge dimensions padded to caller-chosen static
@@ -24,18 +43,90 @@ interval predicate in monotone float-key space).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from repro.core.entry import EntryTable
 from repro.core.graph import LabeledGraph
 
+# canonical ranks are packed two-per-word in 16-bit halves; a grid axis
+# with more distinct values than this cannot use the packed layout
+RANK_LIMIT = 1 << 16
+
+
+def pack_labels(labels: np.ndarray) -> np.ndarray:
+    """Bit-pack int32 rank rectangles ``[..., 4]`` (l, r, b, e) into uint32
+    word pairs ``[..., 2]``: word 0 = ``l | r << 16``, word 1 =
+    ``b | e << 16``. Raises ``ValueError`` when any rank is negative or
+    >= 2^16 (use the int32 layout instead — see ``export_device_graph``)."""
+    labels = np.asarray(labels)
+    if labels.shape[-1] != 4:
+        raise ValueError(f"expected trailing dim 4, got {labels.shape}")
+    if labels.size and (labels.min() < 0 or labels.max() >= RANK_LIMIT):
+        raise ValueError(
+            f"rank out of 16-bit range [0, {RANK_LIMIT}): "
+            f"min={labels.min() if labels.size else 0} "
+            f"max={labels.max() if labels.size else 0}"
+        )
+    u = labels.astype(np.uint32)
+    out = np.empty(labels.shape[:-1] + (2,), dtype=np.uint32)
+    out[..., 0] = u[..., 0] | (u[..., 1] << 16)
+    out[..., 1] = u[..., 2] | (u[..., 3] << 16)
+    return out
+
+
+def unpack_labels(plabels: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_labels`: uint32 ``[..., 2]`` -> int32
+    ``[..., 4]`` rectangles. Bitwise round-trip (pinned in tests)."""
+    plabels = np.asarray(plabels, dtype=np.uint32)
+    if plabels.shape[-1] != 2:
+        raise ValueError(f"expected trailing dim 2, got {plabels.shape}")
+    out = np.empty(plabels.shape[:-1] + (4,), dtype=np.int32)
+    out[..., 0] = (plabels[..., 0] & 0xFFFF).astype(np.int32)
+    out[..., 1] = (plabels[..., 0] >> 16).astype(np.int32)
+    out[..., 2] = (plabels[..., 1] & 0xFFFF).astype(np.int32)
+    out[..., 3] = (plabels[..., 1] >> 16).astype(np.int32)
+    return out
+
+
+def unpack_labels_device(plabels):
+    """jnp twin of :func:`unpack_labels` for traced/device arrays — used by
+    jitted serving steps that must serve the ``fused=False`` parity
+    baseline (int32 layout) from a packed label stack. One definition of
+    the word layout, shared with the kernel oracle (lazy import keeps this
+    module importable without JAX)."""
+    from repro.kernels.ref import unpack_labels_jnp
+
+    return unpack_labels_jnp(plabels)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceIndex:
+    """Memoized jnp views of a ``DeviceGraph``'s search-visible arrays.
+
+    ``table`` is the storage the distance kernels score (int8 ``vec_q``
+    when quantized, else f32 ``vectors``); ``labels`` is the packed
+    ``[n, E, 2]`` uint32 table when the export packed, else the int32
+    ``[n, E, 4]`` layout — the search core dispatches on the trailing dim.
+    """
+
+    table: object             # jnp [n, d] f32 or int8
+    scales: object | None     # jnp [n] f32 (int8 storage only)
+    norms: object | None      # jnp [n] f32 cached ‖v‖²
+    nbr: object               # jnp [n, E] int32
+    labels: object            # jnp [n, E, 2] uint32 or [n, E, 4] int32
+
+    @property
+    def packed(self) -> bool:
+        return self.labels.shape[-1] == 2
+
 
 @dataclasses.dataclass
 class DeviceGraph:
     vectors: np.ndarray        # [n, d] f32
     nbr: np.ndarray            # [n, E] int32, -1 padded
-    labels: np.ndarray         # [n, E, 4] int32
+    labels: np.ndarray | None  # [n, E, 4] int32 — None when packed-only
     U_X: np.ndarray            # [num_x] f64 canonical X values
     U_Y: np.ndarray            # [num_y] f64 canonical Y values
     entry_node: np.ndarray     # [num_x] int32 (-1 = none)
@@ -48,6 +139,10 @@ class DeviceGraph:
     planner: object | None = None     # repro.exec.SelectivityEstimator —
                                       # rank-space histogram for the query
                                       # planner, rebuilt with each export
+    plabels: np.ndarray | None = None  # [n, E, 2] uint32 bit-packed labels
+                                       # (the at-rest layout when ranks fit)
+    _cache: dict | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n(self) -> int:
@@ -65,13 +160,115 @@ class DeviceGraph:
         ``[B, visited_words]`` bitmap keeps one shape across epoch swaps."""
         return (self.n + 31) // 32
 
+    def labels_i32(self) -> np.ndarray:
+        """The int32 ``[n, E, 4]`` rectangle view — the stored array when
+        the export fell back, otherwise unpacked (and cached) from the
+        packed words. Used by the non-packed parity-oracle search paths."""
+        if self.labels is not None:
+            return self.labels
+        cache = self._cache if self._cache is not None else {}
+        out = cache.get("labels_i32")
+        if out is None:
+            out = unpack_labels(self.plabels)
+            cache["labels_i32"] = out
+            self._cache = cache
+        return out
+
+    def device(self) -> DeviceIndex:
+        """Memoized device-array bundle of the search-visible index state.
+
+        Built once per export — ``batched_udg_search``, the planned
+        executor, the brute-force scan, and the streaming/sharded serving
+        paths all draw from it instead of calling ``jnp.asarray`` per
+        batch (which re-staged the full table every call). Streaming epoch
+        swaps publish a new ``DeviceGraph``, so the stale bundle dies with
+        the old epoch object; ``invalidate_device()`` drops it early."""
+        import jax.numpy as jnp
+
+        cache = self._cache if self._cache is not None else {}
+        dev = cache.get("device")
+        if dev is None:
+            if self.vec_q is not None:
+                table = jnp.asarray(self.vec_q)
+                scales = jnp.asarray(self.scales)
+            else:
+                table = jnp.asarray(self.vectors)
+                scales = None
+            lab = self.plabels if self.plabels is not None else self.labels
+            dev = DeviceIndex(
+                table=table,
+                scales=scales,
+                norms=jnp.asarray(self.norms) if self.norms is not None else None,
+                nbr=jnp.asarray(self.nbr),
+                labels=jnp.asarray(lab),
+            )
+            cache["device"] = dev
+            self._cache = cache
+        return dev
+
+    def serving_labels(self, *, fused: bool = True, packed: bool | None = None):
+        """The device label view a serving call should search with — ONE
+        definition of the layout rule for every entry point
+        (``batched_udg_search``, ``exec.execute_batch``,
+        ``StreamingIndex.search``):
+
+        * ``packed=None`` — packed words whenever the export carries them;
+        * ``packed=True`` — require the packed export (``ValueError`` on a
+          rank-width fallback, regardless of ``fused``);
+        * ``packed=False`` — force the int32 parity-oracle layout;
+        * ``fused=False`` — the pre-gather baseline only understands int32
+          rectangles, so the packed words are never returned.
+        """
+        if packed is None:
+            packed = self.plabels is not None
+        elif packed and self.plabels is None:
+            raise ValueError(
+                "packed=True but the export carries no packed labels "
+                "(grid exceeded the 16-bit rank budget or "
+                "packed_labels=False)"
+            )
+        dev = self.device()
+        if fused and packed:
+            return dev.labels
+        return self.device_labels_i32() if dev.packed else dev.labels
+
+    def device_labels_i32(self):
+        """Memoized jnp int32 label view (the parity-oracle layout)."""
+        import jax.numpy as jnp
+
+        cache = self._cache if self._cache is not None else {}
+        out = cache.get("device_labels_i32")
+        if out is None:
+            out = jnp.asarray(self.labels_i32())
+            cache["device_labels_i32"] = out
+            self._cache = cache
+        return out
+
+    def invalidate_device(self) -> None:
+        """Drop the memoized device bundle (and unpacked-label cache)."""
+        self._cache = None
+
+    def nbytes_by_component(self) -> dict:
+        """Host bytes of each index component (the at-rest layout: packed
+        labels when available; the lazily unpacked cache is not counted)."""
+        lab = self.plabels if self.plabels is not None else self.labels
+        out = {
+            "vectors": self.vectors.nbytes,
+            "nbr": self.nbr.nbytes,
+            "labels": lab.nbytes if lab is not None else 0,
+            "grids": self.U_X.nbytes + self.U_Y.nbytes,
+            "entry": self.entry_node.nbytes + self.entry_y_rank.nbytes,
+        }
+        if self.norms is not None:
+            out["norms"] = self.norms.nbytes
+        if self.vec_q is not None:
+            out["vec_q"] = self.vec_q.nbytes
+        if self.scales is not None:
+            out["scales"] = self.scales.nbytes
+        return out
+
     def nbytes(self) -> int:
-        opt = [a for a in (self.norms, self.vec_q, self.scales) if a is not None]
-        return sum(
-            a.nbytes
-            for a in (self.vectors, self.nbr, self.labels, self.U_X, self.U_Y,
-                      self.entry_node, self.entry_y_rank, *opt)
-        )
+        return sum(self.nbytes_by_component().values())
 
 
 def export_device_graph(
@@ -83,6 +280,7 @@ def export_device_graph(
     edge_capacity: int | None = None,
     quantize_int8: bool = False,
     planner_buckets: int = 64,
+    packed_labels: bool | None = None,
 ) -> DeviceGraph:
     """Pad the host adjacency into dense arrays (E = max degree, lane-aligned).
 
@@ -92,6 +290,14 @@ def export_device_graph(
     Rows whose labeled degree exceeds ``edge_capacity`` keep their earliest
     tuples — those come from the threshold sweep (the connectivity-critical
     edges); patch tuples are appended last and are the first to be dropped.
+
+    ``packed_labels`` selects the label layout: ``None`` (default) packs
+    the rank rectangles into ``[n, E, 2]`` uint32 words whenever both
+    canonical grids fit 16-bit ranks and falls back to the int32
+    ``[n, E, 4]`` layout *with a warning* otherwise; ``True`` requires the
+    packed layout (raises ``ValueError`` on overflow — used by streaming,
+    which must keep one layout across epochs); ``False`` forces int32 (the
+    parity-oracle layout).
 
     Per-node squared norms are precomputed here — once per export instead of
     once per beam expansion — so the gather-fused kernel scores candidates
@@ -136,6 +342,30 @@ def export_device_graph(
         scored = np.asarray(vectors, dtype=np.float32)
     norms = np.sum(scored * scored, axis=1, dtype=np.float32)
     ent = et.device_arrays()
+    # rank-width guard: two 16-bit ranks per packed word, so both grids
+    # must stay under RANK_LIMIT (ranks are grid indices, and the emitted
+    # rectangles never exceed them — belt-and-braces checked by pack_labels)
+    num_x, num_y = g.space.U_X.shape[0], g.space.U_Y.shape[0]
+    fits = num_x <= RANK_LIMIT and num_y <= RANK_LIMIT
+    plabels = None
+    if packed_labels is None:
+        if fits:
+            plabels = pack_labels(labels)
+            labels = None
+        else:
+            warnings.warn(
+                f"canonical grid ({num_x} x {num_y}) exceeds the 16-bit "
+                f"rank budget ({RANK_LIMIT}); falling back to the int32 "
+                "label layout", RuntimeWarning, stacklevel=2,
+            )
+    elif packed_labels:
+        if not fits:
+            raise ValueError(
+                f"packed_labels=True but canonical grid ({num_x} x {num_y})"
+                f" exceeds the 16-bit rank budget ({RANK_LIMIT})"
+            )
+        plabels = pack_labels(labels)
+        labels = None
     # planner state rides along with the export, like the cached norms:
     # the selectivity estimator is built over the REAL nodes only (padding
     # rows have no rank coordinates) and is rebuilt on every epoch swap.
@@ -156,6 +386,7 @@ def export_device_graph(
         vec_q=vec_q,
         scales=scales,
         planner=planner,
+        plabels=plabels,
     )
 
 

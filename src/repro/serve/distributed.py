@@ -37,8 +37,17 @@ from repro.exec import (
 )
 from repro.exec.executor import planned_exec_core
 from repro.search.batched import _batched_search_core
-from repro.search.device_graph import export_device_graph
+from repro.search.device_graph import export_device_graph, unpack_labels_device
 from repro.distributed.compat import shard_map as _shard_map
+
+
+def _oracle_labels(lab, fused: bool):
+    """The fused paths dispatch on the label layout; the unfused parity
+    baseline needs int32 rectangles, so a packed stack is unpacked
+    device-side (trace-time branch — `fused` and the layout are static)."""
+    if not fused and lab.shape[-1] == 2:
+        return unpack_labels_device(lab)
+    return lab
 
 
 @dataclasses.dataclass
@@ -47,7 +56,10 @@ class ShardedIndex:
 
     vectors: np.ndarray       # [shards, n_l, d]
     nbr: np.ndarray           # [shards, n_l, E]
-    labels: np.ndarray        # [shards, n_l, E, 4]
+    labels: np.ndarray        # [shards, n_l, E, 2] uint32 bit-packed rank
+                              # rectangles (the default; [.., E, 4] int32
+                              # only when some shard's grid overflowed the
+                              # 16-bit rank budget)
     norms: np.ndarray         # [shards, n_l] f32 cached ‖v‖² per node
     U_X: np.ndarray           # [shards, ux_max] f32, +inf padded
     U_Y: np.ndarray           # [shards, uy_max] f32, +inf padded (keeps the
@@ -61,10 +73,31 @@ class ShardedIndex:
     # the query planner) — host-side planning state, like the norms are
     # device-side scoring state; rebuilt whenever the shards are rebuilt
     planners: list | None = None
+    _cache: dict | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def num_shards(self) -> int:
         return int(self.vectors.shape[0])
+
+    def device(self) -> dict:
+        """Memoized jnp views of the stacked database arrays — the serving
+        step's inputs are staged once per index build instead of once per
+        ``serve_batch`` call (the same fix as ``DeviceGraph.device()``)."""
+        cache = self._cache if self._cache is not None else {}
+        dev = cache.get("device")
+        if dev is None:
+            dev = {
+                name: jnp.asarray(getattr(self, name))
+                for name in ("vectors", "nbr", "labels", "norms", "U_X",
+                             "U_Y", "num_y", "entry_node", "entry_y_rank")
+            }
+            cache["device"] = dev
+            self._cache = cache
+        return dev
+
+    def invalidate_device(self) -> None:
+        self._cache = None
 
 
 def build_sharded_index(
@@ -106,7 +139,13 @@ def build_sharded_index(
 
     vec = np.stack([dg.vectors for dg in dgs])
     nbr = np.stack([padE(dg.nbr, E, -1) for dg in dgs])
-    lab = np.stack([padE(dg.labels, E, 0) for dg in dgs])
+    # every shard packs under the same 16-bit rank budget (shard grids are
+    # <= n_l values); one overflowing shard demotes the whole stack to the
+    # int32 layout so the serving step sees a single label shape
+    if all(dg.plabels is not None for dg in dgs):
+        lab = np.stack([padE(dg.plabels, E, 0) for dg in dgs])
+    else:
+        lab = np.stack([padE(dg.labels_i32(), E, 0) for dg in dgs])
     nrm = np.stack([dg.norms for dg in dgs])
     UX = np.full((num_shards, ux), np.inf, np.float32)
     UY = np.full((num_shards, uy), np.inf, np.float32)
@@ -243,7 +282,7 @@ def make_serving_step(
     def shard_fn(vec, nbr, lab, nrm, UX, UY, num_y, ent, enty, q, xq, yq,
                  scales=None):
         # leading shard dim is 1 on-device
-        vec, nbr, lab, nrm = vec[0], nbr[0], lab[0], nrm[0]
+        vec, nbr, lab, nrm = vec[0], nbr[0], _oracle_labels(lab[0], fused), nrm[0]
         UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
         states, ep = _canonicalize_local(UX, UY, num_y[0], ent, enty, xq, yq)
         # cached norms must match the rows the kernel scores: ShardedIndex
@@ -306,7 +345,7 @@ def make_planned_serving_step(
 
     def shard_fn(vec, nbr, lab, nrm, UX, UY, num_y, ent, enty, q, xq, yq,
                  plans, bf_ids):
-        vec, nbr, lab, nrm = vec[0], nbr[0], lab[0], nrm[0]
+        vec, nbr, lab, nrm = vec[0], nbr[0], _oracle_labels(lab[0], fused), nrm[0]
         UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
         plans, bf_ids = plans[0], bf_ids[0]
         states, ep = _canonicalize_local(UX, UY, num_y[0], ent, enty, xq, yq)
@@ -396,9 +435,11 @@ def serve_batch(
                 mesh, idx.relation, k=k, beam=beam, merge=merge, config=config
             ),
         )
+        dev = idx.device()
         gids, d = step(
-            idx.vectors, idx.nbr, idx.labels, idx.norms, idx.U_X, idx.U_Y,
-            idx.num_y, idx.entry_node, idx.entry_y_rank,
+            dev["vectors"], dev["nbr"], dev["labels"], dev["norms"],
+            dev["U_X"], dev["U_Y"], dev["num_y"], dev["entry_node"],
+            dev["entry_y_rank"],
             np.asarray(q, np.float32),
             np.asarray(xq, np.float32),
             np.asarray(yq, np.float32),
@@ -411,9 +452,11 @@ def serve_batch(
                 mesh, idx.relation, k=k, beam=beam, merge=merge
             ),
         )
+        dev = idx.device()
         gids, d = step(
-            idx.vectors, idx.nbr, idx.labels, idx.norms, idx.U_X, idx.U_Y,
-            idx.num_y, idx.entry_node, idx.entry_y_rank,
+            dev["vectors"], dev["nbr"], dev["labels"], dev["norms"],
+            dev["U_X"], dev["U_Y"], dev["num_y"], dev["entry_node"],
+            dev["entry_y_rank"],
             np.asarray(q, np.float32),
             np.asarray(xq, np.float32),
             np.asarray(yq, np.float32),
@@ -536,10 +579,17 @@ class ShardedStreamingIndex:
         sh0 = self.shards[0]
         ncap, dcap = sh0.node_capacity, sh0.delta_capacity
         ecap, dim = sh0.edge_capacity, sh0.dim
+        # every shard shares one construction-time label layout (see
+        # StreamingIndex._packed_labels), so the stack — and the jitted
+        # mesh step's label shape — is fixed for the fleet's lifetime
+        if sh0._packed_labels:
+            lab_stack = np.zeros((S, ncap, ecap, 2), np.uint32)
+        else:
+            lab_stack = np.zeros((S, ncap, ecap, 4), np.int32)
         out = {
             "vectors": np.zeros((S, ncap, dim), np.float32),
             "nbr": np.full((S, ncap, ecap), -1, np.int32),
-            "labels": np.zeros((S, ncap, ecap, 4), np.int32),
+            "labels": lab_stack,
             "norms": np.zeros((S, ncap), np.float32),
             "live": np.zeros((S, ncap), bool),
             "ext": np.full((S, ncap), -1, np.int32),
@@ -578,7 +628,10 @@ class ShardedStreamingIndex:
             seg = sh._delta.device_segment()
         stacked["vectors"][i] = dg.vectors
         stacked["nbr"][i] = dg.nbr
-        stacked["labels"][i] = dg.labels
+        stacked["labels"][i] = (
+            dg.plabels if stacked["labels"].dtype == np.uint32
+            else dg.labels_i32()
+        )
         stacked["norms"][i] = dg.norms
         stacked["live"][i] = live
         stacked["ext"][i] = ext
@@ -626,7 +679,7 @@ def make_streaming_serving_step(
 
     def shard_fn(vec, nbr, lab, nrm, live, ext, dvec, dlab, dids, dext,
                  UX, UY, num_y, ent, enty, q, xq, yq, dstate):
-        vec, nbr, lab, nrm = vec[0], nbr[0], lab[0], nrm[0]
+        vec, nbr, lab, nrm = vec[0], nbr[0], _oracle_labels(lab[0], fused), nrm[0]
         live, ext = live[0], ext[0]
         dvec, dlab, dids, dext = dvec[0], dlab[0], dids[0], dext[0]
         UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]

@@ -39,7 +39,11 @@ from repro.exec import (
     plan_queries,
 )
 from repro.search.batched import prepare_states_extended
-from repro.search.device_graph import DeviceGraph, export_device_graph
+from repro.search.device_graph import (
+    RANK_LIMIT,
+    DeviceGraph,
+    export_device_graph,
+)
 from repro.stream.delta import DeltaBuffer, query_key_state
 from repro.stream.search import (
     planned_streaming_search_core,
@@ -92,19 +96,26 @@ class _CompactionJob:
 
 
 def _empty_device_graph(dim: int, node_capacity: int, edge_capacity: int,
-                        relation: str) -> DeviceGraph:
+                        relation: str, packed: bool) -> DeviceGraph:
     """Epoch-0 compacted tier: no nodes, no grids, every query falls through
-    to the delta scan (entry lookup yields ep = -1)."""
+    to the delta scan (entry lookup yields ep = -1). ``packed`` must match
+    the layout every later epoch will export, so the jitted serving step
+    sees one label shape across swaps."""
+    # all-zero rectangles in whichever layout later epochs will use —
+    # built directly (packing zeros just wastes a full int32 allocation)
     return DeviceGraph(
         vectors=np.zeros((node_capacity, dim), dtype=np.float32),
         nbr=np.full((node_capacity, edge_capacity), -1, dtype=np.int32),
-        labels=np.zeros((node_capacity, edge_capacity, 4), dtype=np.int32),
+        labels=(None if packed
+                else np.zeros((node_capacity, edge_capacity, 4), np.int32)),
         U_X=np.empty(0, dtype=np.float64),
         U_Y=np.empty(0, dtype=np.float64),
         entry_node=np.empty(0, dtype=np.int32),
         entry_y_rank=np.empty(0, dtype=np.int32),
         relation=relation,
         norms=np.zeros(node_capacity, dtype=np.float32),
+        plabels=(np.zeros((node_capacity, edge_capacity, 2), np.uint32)
+                 if packed else None),
     )
 
 
@@ -159,12 +170,17 @@ class StreamingIndex:
 
         self._lock = threading.RLock()
         self._epoch = 0
-        self._dg = _empty_device_graph(dim, node_capacity, edge_capacity, relation)
-        # device-resident immutables of the current epoch
-        self._dev_vectors = jnp.asarray(self._dg.vectors)
-        self._dev_nbr = jnp.asarray(self._dg.nbr)
-        self._dev_labels = jnp.asarray(self._dg.labels)
-        self._dev_norms = jnp.asarray(self._dg.norms)
+        # label layout is a *construction-time* decision so every epoch
+        # exports the same shapes (one compiled serving step across swaps):
+        # canonical grids never exceed the live-node count <= node_capacity,
+        # so capacities within the 16-bit rank budget always pack
+        self._packed_labels = node_capacity <= RANK_LIMIT
+        self._dg = _empty_device_graph(
+            dim, node_capacity, edge_capacity, relation,
+            packed=self._packed_labels,
+        )
+        # device-resident immutables of the current epoch live in the
+        # DeviceGraph's memoized .device() bundle (swapped as a unit)
         self._graph_n = 0
         self._graph_live = np.zeros(node_capacity, dtype=bool)
         self._graph_ext = np.full(node_capacity, -1, dtype=np.int64)
@@ -330,10 +346,12 @@ class StreamingIndex:
                     job.entry,
                     node_capacity=self.node_capacity,
                     edge_capacity=self.edge_capacity,
+                    packed_labels=self._packed_labels,
                 )
             else:
                 dg = _empty_device_graph(
-                    self.dim, self.node_capacity, self.edge_capacity, self.relation
+                    self.dim, self.node_capacity, self.edge_capacity,
+                    self.relation, packed=self._packed_labels,
                 )
             graph_live = np.zeros(self.node_capacity, dtype=bool)
             graph_live[:n_new] = True
@@ -370,10 +388,8 @@ class StreamingIndex:
                     delta.tombstone(i)
 
             self._dg = dg
-            self._dev_vectors = jnp.asarray(dg.vectors)
-            self._dev_nbr = jnp.asarray(dg.nbr)
-            self._dev_labels = jnp.asarray(dg.labels)
-            self._dev_norms = jnp.asarray(dg.norms)
+            dg.device()  # stage the new epoch's device bundle eagerly —
+            # the swap is the write point, queries only ever read it
             self._graph_n = n_new
             self._graph_live = graph_live
             self._graph_ext = graph_ext
@@ -457,13 +473,16 @@ class StreamingIndex:
             raise ValueError(f"k={k} > beam={beam}")
 
         with self._lock:
-            # consistent snapshot of one epoch: device immutables are swapped
-            # as a unit; mutable masks/delta are uploaded once per mutation
-            # (the cache is invalidated by insert/delete/epoch swap) so
-            # read-heavy serving doesn't re-transfer full-capacity buffers.
+            # consistent snapshot of one epoch: the DeviceGraph's memoized
+            # .device() bundle is swapped as a unit (a fresh graph — and a
+            # fresh bundle — is published by finish_compaction); mutable
+            # masks/delta are uploaded once per mutation (the cache is
+            # invalidated by insert/delete/epoch swap) so read-heavy
+            # serving doesn't re-transfer full-capacity buffers.
             dg = self._dg
-            dev = (self._dev_vectors, self._dev_nbr, self._dev_labels)
-            dev_norms = self._dev_norms
+            didx = dg.device()
+            dev = (didx.table, didx.nbr, dg.serving_labels(fused=fused))
+            dev_norms = didx.norms
             if self._dev_mut is None:
                 live = self._graph_live.copy()
                 ext = np.where(live, self._graph_ext, -1).astype(np.int32)

@@ -3,11 +3,12 @@
 One jitted step searches both tiers and merges:
 
   graph tier   lockstep beam search over the compacted UDG
-               (``_batched_search_core`` asked for the full beam, gather-
-               fused path: in-kernel HBM row DMA + cached norms + bit-packed
-               visited), then tombstone-masked — deleted nodes still *route*
-               (soft delete, as in FreshDiskANN) but never surface in
-               results;
+               (``_batched_search_core`` asked for the full beam; with the
+               packed ``[N, E, 2]`` uint32 label layout this is the
+               packed-metadata superkernel path — in-kernel HBM row + label
+               DMA, cached norms, bit-packed visited, beam-merge primitive),
+               then tombstone-masked — deleted nodes still *route* (soft
+               delete, as in FreshDiskANN) but never surface in results;
   delta tier   masked brute-force scan of the statically-padded delta
                segment through the same gather-fused Pallas kernel (label
                rectangles in monotone float-key space; slot ids double as
@@ -89,7 +90,7 @@ def two_tier_merge(
 def streaming_search_core(
     vectors: jnp.ndarray,      # [N, d]  compacted tier (capacity-padded)
     nbr: jnp.ndarray,          # [N, E] int32
-    labels: jnp.ndarray,       # [N, E, 4] int32
+    labels: jnp.ndarray,       # [N, E, 2] uint32 packed (or [N, E, 4] int32)
     live: jnp.ndarray,         # [N] bool   (False = tombstoned or padding)
     ext_ids: jnp.ndarray,      # [N] int32  external id per node (-1 padding)
     dvec: jnp.ndarray,         # [C, d]  delta tier
@@ -130,7 +131,7 @@ def streaming_search_core(
 def planned_streaming_search_core(
     vectors: jnp.ndarray,      # [N, d]  compacted tier (capacity-padded)
     nbr: jnp.ndarray,          # [N, E] int32
-    labels: jnp.ndarray,       # [N, E, 4] int32
+    labels: jnp.ndarray,       # [N, E, 2] uint32 packed (or [N, E, 4] int32)
     live: jnp.ndarray,         # [N] bool
     ext_ids: jnp.ndarray,      # [N] int32
     dvec: jnp.ndarray,         # [C, d]  delta tier

@@ -147,13 +147,18 @@ def test_prepare_states_matches_host_canonicalization(setup):
 def test_device_graph_export_consistency(setup):
     vecs, s, t, g, dg = setup
     assert dg.nbr.shape[0] == g.n
+    # default export bit-packs the rank rectangles (grid fits 16 bits);
+    # labels_i32() is the unpacked view the parity-oracle paths use
+    assert dg.plabels is not None and dg.plabels.dtype == np.uint32
+    assert dg.plabels.shape == (g.n, dg.max_degree, 2)
+    labels = dg.labels_i32()
     for u in (0, 5, 100):
         nbr, l, r, b, e = g.tuples(u)
         k = nbr.shape[0]
         np.testing.assert_array_equal(dg.nbr[u, :k], nbr)
         assert np.all(dg.nbr[u, k:] == -1)
-        np.testing.assert_array_equal(dg.labels[u, :k, 0], l)
-        np.testing.assert_array_equal(dg.labels[u, :k, 3], e)
+        np.testing.assert_array_equal(labels[u, :k, 0], l)
+        np.testing.assert_array_equal(labels[u, :k, 3], e)
 
 
 def test_int8_search_path_recall(setup, query_vectors):
@@ -171,7 +176,7 @@ def test_int8_search_path_recall(setup, query_vectors):
     states, ep = prepare_states(dg, qs.s_q, qs.t_q)
     vq, sc = quantize_int8(jnp.asarray(dg.vectors))
     ids, _ = _batched_search_core(
-        vq, jnp.asarray(dg.nbr), jnp.asarray(dg.labels),
+        vq, jnp.asarray(dg.nbr), jnp.asarray(dg.labels_i32()),
         jnp.asarray(qs.vectors), jnp.asarray(states), jnp.asarray(ep),
         k=10, beam=64, max_iters=128, use_ref=True, scales=sc,
     )

@@ -202,6 +202,157 @@ def test_filter_dist_gather_int8_scales():
     np.testing.assert_allclose(got[fin], want[fin], rtol=1e-3, atol=1e-3)
 
 
+def _packed_case(n, b, m, e, d, seed=0, rank_hi=12):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    norms = jnp.sum(table * table, axis=1)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    cur = jnp.asarray(rng.integers(0, n, size=(b, m)).astype(np.int32))
+    cand = jnp.asarray(rng.integers(-1, n, size=(b, m * e)).astype(np.int32))
+    lo = rng.integers(0, rank_hi, size=(n, e, 2)).astype(np.uint32)
+    hi = rng.integers(0, rank_hi, size=(n, e, 2)).astype(np.uint32)
+    plabels = jnp.asarray(lo | (hi << 16))
+    state = jnp.asarray(rng.integers(0, rank_hi, size=(b, 2)).astype(np.int32))
+    W = (n + 31) // 32
+    vis = jnp.asarray(
+        rng.integers(0, 2 ** 32, size=(b, W), dtype=np.uint64).astype(np.uint32)
+    )
+    return table, plabels, norms, q, cur, cand, state, vis
+
+
+@pytest.mark.parametrize("n,b,m,e,d", [
+    (33, 1, 1, 5, 4),       # B=1, bitmap tail word
+    (100, 3, 2, 12, 7),     # odd D, multi-expand label rows
+    (200, 4, 1, 130, 16),   # M*E not a multiple of the tile
+    (257, 2, 4, 65, 32),    # wide multi-expand straddling tiles
+])
+def test_filter_dist_gather_packed_matches_ref(n, b, m, e, d):
+    """The packed superkernel (in-kernel label-row DMA + mask-and-shift
+    dominance test) matches its jnp oracle across tile/expand shapes."""
+    args = _packed_case(n, b, m, e, d)
+    got = np.asarray(ops.filter_dist_gather_packed(*args))
+    want = np.asarray(ops.filter_dist_gather_packed(*args, use_ref=True))
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+def test_filter_dist_gather_packed_matches_int32_kernel():
+    """Packed words and the int32 rectangles encode the same test: the
+    packed superkernel agrees with the int32 gather kernel given the
+    unpacked layout of the same labels."""
+    from repro.search.device_graph import unpack_labels
+
+    n, b, m, e, d = 90, 3, 2, 11, 8
+    table, plabels, norms, q, cur, cand, state, vis = _packed_case(
+        n, b, m, e, d, seed=3)
+    got = np.asarray(ops.filter_dist_gather_packed(
+        table, plabels, norms, q, cur, cand, state, vis))
+    lab4 = jnp.asarray(unpack_labels(np.asarray(plabels)))
+    lab_g = lab4[jnp.clip(cur, 0, n - 1)].reshape(b, m * e, 4)
+    want = np.asarray(ops.filter_dist_gather(
+        table, norms, q, cand, lab_g, state, vis))
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+def test_packed_label_semantics_boundaries():
+    """Closed rectangle bounds survive the 16-bit packing: a == r and the
+    b > c inactive case behave exactly as the int32 label test."""
+    from repro.search.device_graph import pack_labels
+
+    n, d = 8, 4
+    table = jnp.zeros((n, d), jnp.float32)
+    norms = jnp.zeros((n,), jnp.float32)
+    q = jnp.zeros((1, d), jnp.float32)
+    #            active        a==r boundary   b > c (inactive)
+    lab4 = np.array([[[0, 5, 0, 5], [2, 2, 0, 5], [0, 5, 3, 5]]], np.int32)
+    plabels = jnp.asarray(np.broadcast_to(pack_labels(lab4[0])[None], (n, 3, 2)))
+    cur = jnp.zeros((1, 1), jnp.int32)
+    cand = jnp.asarray([[0, 1, 2]], dtype=jnp.int32)
+    state = jnp.asarray([[2, 2]], jnp.int32)
+    vis = jnp.zeros((1, 1), jnp.uint32)
+    for use_ref in (True, False):
+        out = np.asarray(ops.filter_dist_gather_packed(
+            table, plabels, norms, q, cur, cand, state, vis, use_ref=use_ref))
+        assert np.isfinite(out[0, 0]) and np.isfinite(out[0, 1])
+        assert np.isinf(out[0, 2])
+
+
+def _merge_case(b, l, c, n, seed=0, tie_heavy=False, all_inf=False):
+    rng = np.random.default_rng(seed)
+    beam_d = np.sort(rng.normal(size=(b, l)).astype(np.float32) ** 2, axis=1)
+    ninf = int(rng.integers(0, max(l // 2, 1)))
+    if ninf:
+        beam_d[:, l - ninf:] = np.inf
+    beam_ids = rng.integers(-1, n, size=(b, l)).astype(np.int32)
+    beam_ids[~np.isfinite(beam_d)] = -1
+    beam_exp = rng.random((b, l)) < 0.5
+    if tie_heavy:
+        # few distinct distances + few distinct ids: every tie-break and
+        # duplicate rule is exercised
+        cand_d = rng.integers(0, 4, size=(b, c)).astype(np.float32)
+        cand_ids = rng.integers(0, min(8, n), size=(b, c)).astype(np.int32)
+        beam_d = np.sort(
+            rng.integers(0, 4, size=(b, l)).astype(np.float32), axis=1)
+    else:
+        cand_d = rng.normal(size=(b, c)).astype(np.float32) ** 2
+        cand_ids = rng.integers(-1, n, size=(b, c)).astype(np.int32)
+    cand_d[rng.random((b, c)) < 0.3] = np.inf
+    if all_inf:
+        cand_d[:] = np.inf
+        cand_ids[:] = -1
+    return tuple(map(jnp.asarray,
+                     (beam_d, beam_ids, beam_exp, cand_d, cand_ids)))
+
+
+@pytest.mark.parametrize("b,l,c,n,tie,all_inf", [
+    (3, 64, 88, 4000, False, False),   # bench shape
+    (2, 48, 17, 100, False, False),    # L and C not powers of two
+    (1, 7, 3, 10, True, False),        # tiny, tie-heavy
+    (2, 32, 40, 40, True, False),      # heavy duplicate ids + tied dists
+    (2, 16, 8, 50, False, True),       # all-inf candidate set
+    (2, 96, 352, 65000, False, False), # wide-beam / multi-expand scale
+])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_beam_merge_matches_stable_sort_oracle(b, l, c, n, tie, all_inf, seed):
+    """Both beam_merge implementations — the jnp top_k path and the Pallas
+    bitonic sort+merge network (interpret) — are bitwise equal to the
+    stable lax.sort oracle, including exact distance ties, duplicate ids,
+    all-inf candidates, and non-power-of-two L / M·E."""
+    from repro.kernels.beam_merge import beam_merge_jnp, beam_merge_pallas
+
+    case = _merge_case(b, l, c, n, seed, tie, all_inf)
+    want = ref.beam_merge_ref(*case, n=n)
+    got_jnp = beam_merge_jnp(*case, n=n)
+    got_pl = beam_merge_pallas(*case, n=n, interpret=True)
+    names = ("ids", "d", "exp", "keep")
+    for g, w, nm in zip(got_jnp, want, names):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"jnp {nm}")
+    for g, w, nm in zip(got_pl, want, names):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"pallas {nm}")
+
+
+def test_beam_merge_dedup_keeps_first_and_marks_bits():
+    """Duplicate ids: exactly the first finite occurrence survives (keep
+    bit set), later copies are suppressed, and the merged beam holds the
+    id once."""
+    beam_d = jnp.asarray([[1.0, jnp.inf]])
+    beam_ids = jnp.asarray([[7, -1]], dtype=jnp.int32)
+    beam_exp = jnp.asarray([[True, False]])
+    cand_d = jnp.asarray([[0.5, 0.5, 2.0, jnp.inf]])
+    cand_ids = jnp.asarray([[3, 3, 3, 3]], dtype=jnp.int32)
+    ids, d, exp, keep = ops.beam_merge(
+        beam_d, beam_ids, beam_exp, cand_d, cand_ids, n=10, use_ref=True)
+    np.testing.assert_array_equal(np.asarray(keep), [[True, False, False, False]])
+    np.testing.assert_array_equal(np.asarray(ids), [[3, 7]])
+    np.testing.assert_array_equal(np.asarray(d), [[0.5, 1.0]])
+    np.testing.assert_array_equal(np.asarray(exp), [[False, True]])
+
+
 @pytest.mark.parametrize("bq,bc,d", [(4, 9, 8), (65, 200, 48)])
 def test_int8dist_matches_ref_and_f32(bq, bc, d):
     q = _arr((bq, d))
