@@ -47,7 +47,13 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import dataset, emit, get_method, queries
+from benchmarks.common import (
+    dataset,
+    emit,
+    get_method,
+    latency_percentiles,
+    queries,
+)
 from repro.core import EntryTable
 from repro.data import recall_at_k
 from repro.exec import PlannerConfig, execute_batch, planned_exec_cache_size
@@ -67,7 +73,9 @@ def _timed_group(dg, qs, specs, *, beam, repeats):
     loops produce systematic 30-40% gaps between *identical* code paths.
     Round-robin interleaving makes every comparison paired; medians then
     drop the outlier repeats. ``specs``: {name: (plan, config)}. Returns
-    {name: (recall, qps, p50_ms)}.
+    {name: (recall, qps, {p50,p90,p99}_ms)} — the quantiles via the
+    ``repro.obs`` histogram (``latency_percentiles``), QPS from the exact
+    sample median (gate stability).
     """
     runs = {
         name: (lambda plan=plan, config=config: execute_batch(
@@ -93,7 +101,7 @@ def _timed_group(dg, qs, specs, *, beam, repeats):
         name: (
             float(recall_at_k(ids[name], qs)),
             float(qs.nq / np.median(lat[name])),
-            float(np.percentile(lat[name], 50) * 1e3),
+            latency_percentiles(lat[name]),
         )
         for name in runs
     }
@@ -148,9 +156,9 @@ def _calibrate(dg, qsets, n, *, beam, repeats) -> PlannerConfig:
     probe = PlannerConfig()
 
     def lat(qs, plan):
-        _, _, p50_ms = _timed(dg, qs, plan=plan, beam=beam, repeats=repeats,
-                              config=probe)
-        return p50_ms * 1e-3 / qs.nq  # median seconds per query
+        _, _, pcts = _timed(dg, qs, plan=plan, beam=beam, repeats=repeats,
+                            config=probe)
+        return pcts["p50_ms"] * 1e-3 / qs.nq  # median seconds per query
 
     l_graph = lat(mid, "graph")
     v_mid = float(mid.achieved_selectivity.mean()) * n
@@ -236,15 +244,15 @@ def main(tiny: bool = False) -> None:
             },
             beam=beam, repeats=repeats,
         )
-        rec_a, qps_a, p50_a = res["planner"]
+        rec_a, qps_a, _ = res["planner"]
         point = {
             "sigma_target": sigma,
             "sigma_achieved": round(float(qs.achieved_selectivity.mean()), 5),
             "plan_mix": mix,
             "strategies": {
                 name: {"qps": round(qps, 2), "recall_at_10": round(rec, 4),
-                       "p50_ms": round(p50, 3)}
-                for name, (rec, qps, p50) in res.items()
+                       **pcts}
+                for name, (rec, qps, pcts) in res.items()
             },
         }
         iso = {

@@ -116,3 +116,25 @@ def pareto_sweep(method, qs, efs=(8, 16, 32, 64, 128, 256)):
     best_fast = min(good, key=lambda p: p[1]) if good else max(points)
     best_recall = max(points, key=lambda p: (p[0], -p[1]))
     return points, best_fast, best_recall
+
+
+def latency_percentiles(lat_s) -> Dict[str, float]:
+    """p50/p90/p99 (ms) of a latency sample via the ``repro.obs`` fixed-
+    bucket histogram — the same estimator the serving stack exports to
+    Prometheus, so benchmark artifacts and dashboards quote comparable
+    quantiles. A fine geometric ladder (~5%/bucket) keeps the
+    interpolation error well under measurement noise."""
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    h = reg.histogram(
+        "bench_batch_latency_seconds", "benchmark batch wall clock",
+        buckets=tuple(float(b) for b in np.geomspace(1e-5, 120.0, 320)),
+    )
+    h.observe_many(float(x) for x in lat_s)
+    s = h.summary()
+    return {
+        "p50_ms": round(s["p50"] * 1e3, 3),
+        "p90_ms": round(s["p90"] * 1e3, 3),
+        "p99_ms": round(s["p99"] * 1e3, 3),
+    }

@@ -23,6 +23,7 @@ from benchmarks import (
     bench_planner,
     bench_serving,
     bench_streaming,
+    bench_telemetry,
 )
 
 ALL = [
@@ -39,6 +40,7 @@ ALL = [
     ("query_planner", bench_planner.main),
     ("distributed_serving", bench_serving.main),
     ("streaming_index", bench_streaming.main),
+    ("telemetry", bench_telemetry.main),
 ]
 
 

@@ -41,6 +41,7 @@ from repro.exec.plan import (
     default_planner_config,
     plan_queries,
 )
+from repro.obs.stats import combine_stats, stats_to_host
 from repro.search.batched import _batched_search_core, prepare_states_extended
 
 PLANS = ("auto", "graph", "wide", "brute")
@@ -50,7 +51,7 @@ PLANS = ("auto", "graph", "wide", "brute")
     jax.jit,
     static_argnames=(
         "k", "beam", "wide_beam", "max_iters", "wide_max_iters",
-        "use_ref", "fused", "expand", "wide_expand",
+        "use_ref", "fused", "expand", "wide_expand", "stats",
     ),
 )
 def planned_exec_core(
@@ -76,18 +77,29 @@ def planned_exec_core(
     wide_expand: int = 1,
     scales: jnp.ndarray | None = None,
     norms: jnp.ndarray | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """All three strategies in one traced program + per-row plan select."""
-    ids_g, d_g = _batched_search_core(
+    stats: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
+    """All three strategies in one traced program + per-row plan select.
+
+    ``stats=True`` appends a merged :class:`repro.obs.SearchStats`: each
+    graph instantiation sees rows planned elsewhere as masked (ep=-1 →
+    zero iterations → exact-zero counters), so the two stats pytrees merge
+    by addition; ``BRUTE_VALID`` rows do no traversal and stay all-zero
+    (their termination cause reads as ``no_entry``)."""
+    out_g = _batched_search_core(
         vectors, nbr, labels, q, states, ep_graph,
         k=k, beam=beam, max_iters=max_iters, use_ref=use_ref,
         fused=fused, expand=expand, scales=scales, norms=norms,
+        stats=stats,
     )
-    ids_w, d_w = _batched_search_core(
+    out_w = _batched_search_core(
         vectors, nbr, labels, q, states, ep_wide,
         k=k, beam=wide_beam, max_iters=wide_max_iters, use_ref=use_ref,
         fused=fused, expand=wide_expand, scales=scales, norms=norms,
+        stats=stats,
     )
+    ids_g, d_g = out_g[0], out_g[1]
+    ids_w, d_w = out_w[0], out_w[1]
     nrm = effective_norms(vectors, scales, norms)
     ids_b, d_b = brute_topk_impl(
         vectors, nrm, q.astype(jnp.float32), bf_ids,
@@ -102,6 +114,8 @@ def planned_exec_core(
         sel == int(QueryPlan.GRAPH), d_g,
         jnp.where(sel == int(QueryPlan.GRAPH_WIDE), d_w, d_b),
     )
+    if stats:
+        return ids, d, combine_stats(out_g[2], out_w[2])
     return ids, d
 
 
@@ -139,6 +153,7 @@ def execute_batch(
     config: Optional[PlannerConfig] = None,
     return_plans: bool = False,
     packed: bool | None = None,
+    stats: bool = False,
 ):
     """Planned end-to-end batched query over a ``DeviceGraph``.
 
@@ -149,7 +164,9 @@ def execute_batch(
     as in ``batched_udg_search`` (``None`` = packed when exported,
     ``False`` = int32 parity oracle, ``True`` = require packed).
     Returns ``(ids [B, k], dists [B, k])`` plus the ``PlanBatch`` when
-    ``return_plans`` is set (``None`` for the non-auto modes).
+    ``return_plans`` is set (``None`` for the non-auto modes) plus a
+    host-side :class:`repro.obs.SearchStats` when ``stats`` is set (always
+    the last element when requested).
     """
     if plan not in PLANS:
         raise ValueError(f"plan={plan!r} not in {PLANS}")
@@ -193,7 +210,7 @@ def execute_batch(
     dev = dg.device()   # memoized bundle — no per-batch table re-staging
     norms = dev.norms if fused else None
     lab = dg.serving_labels(fused=fused, packed=packed)
-    ids, d = planned_exec_core(
+    out = planned_exec_core(
         dev.table, dev.nbr, lab,
         jnp.asarray(np.asarray(q, dtype=np.float32)),
         jnp.asarray(states),
@@ -203,9 +220,11 @@ def execute_batch(
         max_iters=mi, wide_max_iters=mi * config.wide_beam_scale,
         use_ref=use_ref, fused=fused, expand=expand,
         wide_expand=min(wide_expand, wide_beam),
-        scales=dev.scales, norms=norms,
+        scales=dev.scales, norms=norms, stats=stats,
     )
-    ids, d = np.asarray(ids), np.asarray(d)
+    ret = (np.asarray(out[0]), np.asarray(out[1]))
     if return_plans:
-        return ids, d, pb
-    return ids, d
+        ret += (pb,)
+    if stats:
+        ret += (stats_to_host(out[2]),)
+    return ret

@@ -1,0 +1,262 @@
+"""Device-side traversal counters: a stats pytree for the jitted searches.
+
+``SearchStats`` is an optional extra output of ``_batched_search_core``,
+``planned_exec_core`` and the streaming/sharded serving steps, computed
+*inside* the jitted loop from values the loop already carries (the live
+mask, the kernel's candidate distances, the dedup keep mask, the visited
+bitmap) — no extra gathers, no host sync per iteration. ``stats=False``
+(the default everywhere) compiles to exactly the jaxpr the search had
+before this module existed; ``stats=True`` is a second jit cache entry
+whose shapes are all fixed by (B, beam, max_iters), so it never recompiles
+across epoch swaps or plan mixes.
+
+Counting semantics (pinned against a Python re-execution of the beam
+search in ``tests/test_obs.py``):
+
+  * ``iters[b]``        lockstep iterations in which query ``b`` expanded
+                        at least one beam entry (== its own sequential
+                        iteration count: each query's trajectory is
+                        independent of the batch);
+  * ``expanded[b]``     beam entries popped and expanded (== ``iters``
+                        when ``expand=1``);
+  * ``cand_total[b]``   neighbor slots examined (real ids only — the
+                        ``-1`` adjacency padding is excluded);
+  * ``cand_valid[b]``   candidates surviving the dominance test AND the
+                        visited test (finite kernel distance);
+  * ``kept[b]``         valid candidates surviving intra-iteration dedup
+                        (what actually entered the beam merge);
+  * ``visited[b]``      visited-set population at termination (entry point
+                        + every kept candidate);
+  * ``beam_occupancy[b]``  finite beam entries at termination;
+  * ``hit_max_iters[b]``   True when the iteration cap cut the query off
+                        while it still had unexpanded finite entries —
+                        the early-termination cause (else the beam
+                        converged, or the valid set was empty and the
+                        query never started);
+  * ``delta_valid[b]``  streaming only: delta-tier candidates passing the
+                        filter (zeros for pure graph searches);
+  * ``hop_valid/hop_total[h]``  batch-summed valid/examined candidates at
+                        hop ``h`` — the per-hop valid-candidate fraction
+                        that shows a restrictive filter starving the beam
+                        (the failure mode patch edges exist to fix).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.metrics import (
+    COUNT_BUCKETS,
+    FRACTION_BUCKETS,
+    MetricsRegistry,
+    resolve,
+)
+
+
+class SearchStats(NamedTuple):
+    """Per-query traversal counters (+ batch-summed per-hop tallies).
+
+    A NamedTuple of arrays, hence a pytree: it flows through ``jit``,
+    ``shard_map`` and host conversion unchanged."""
+
+    iters: jnp.ndarray           # [B] i32
+    expanded: jnp.ndarray        # [B] i32
+    cand_total: jnp.ndarray      # [B] i32
+    cand_valid: jnp.ndarray      # [B] i32
+    kept: jnp.ndarray            # [B] i32
+    visited: jnp.ndarray         # [B] i32
+    beam_occupancy: jnp.ndarray  # [B] i32
+    hit_max_iters: jnp.ndarray   # [B] bool
+    delta_valid: jnp.ndarray     # [B] i32
+    hop_valid: jnp.ndarray       # [H] i32 (H = max_iters)
+    hop_total: jnp.ndarray       # [H] i32
+
+
+# [B]-shaped fields (everything except the hop tallies) — the portion the
+# sharded serving steps psum across shards and return per query.
+PER_QUERY_FIELDS = (
+    "iters", "expanded", "cand_total", "cand_valid", "kept", "visited",
+    "beam_occupancy", "hit_max_iters", "delta_valid",
+)
+
+
+def init_search_stats(B: int, max_iters: int) -> SearchStats:
+    """All-zero counters for a batch of ``B`` and an ``[max_iters]`` hop axis."""
+    zi = jnp.zeros(B, dtype=jnp.int32)
+    return SearchStats(
+        iters=zi, expanded=zi, cand_total=zi, cand_valid=zi, kept=zi,
+        visited=zi, beam_occupancy=zi,
+        hit_max_iters=jnp.zeros(B, dtype=bool), delta_valid=zi,
+        hop_valid=jnp.zeros(max_iters, dtype=jnp.int32),
+        hop_total=jnp.zeros(max_iters, dtype=jnp.int32),
+    )
+
+
+def accumulate_iteration(
+    st: SearchStats,
+    *,
+    live: jnp.ndarray,    # [B, M] bool — beam entries actually expanded
+    nb: jnp.ndarray,      # [B, M*E] i32 — candidate ids (-1 = padding)
+    d_new: jnp.ndarray,   # [B, M*E] f32 — kernel distances (inf = filtered)
+    keep: jnp.ndarray,    # [B, M*E] bool — dedup survivors
+    it: jnp.ndarray,      # scalar i32 — current hop index
+) -> SearchStats:
+    """Fold one loop iteration's masks into the counters (trace-time)."""
+    exp = jnp.sum(live.astype(jnp.int32), axis=1)
+    tot = jnp.sum((nb >= 0).astype(jnp.int32), axis=1)
+    val = jnp.sum(jnp.isfinite(d_new).astype(jnp.int32), axis=1)
+    kp = jnp.sum(keep.astype(jnp.int32), axis=1)
+    return st._replace(
+        iters=st.iters + (exp > 0).astype(jnp.int32),
+        expanded=st.expanded + exp,
+        cand_total=st.cand_total + tot,
+        cand_valid=st.cand_valid + val,
+        kept=st.kept + kp,
+        hop_valid=st.hop_valid.at[it].add(jnp.sum(val)),
+        hop_total=st.hop_total.at[it].add(jnp.sum(tot)),
+    )
+
+
+def finalize_stats(
+    st: SearchStats,
+    *,
+    beam_d: jnp.ndarray,    # [B, L] f32 final beam distances
+    beam_exp: jnp.ndarray,  # [B, L] bool final expansion flags
+    visited: jnp.ndarray,   # [B, W] u32 bitmap or [B, n] bool dense
+) -> SearchStats:
+    """Termination-time fields: visited population, occupancy, stop cause."""
+    finite = jnp.isfinite(beam_d)
+    if visited.dtype == jnp.uint32:
+        pop = jnp.sum(
+            jax.lax.population_count(visited).astype(jnp.int32), axis=1
+        )
+    else:
+        pop = jnp.sum(visited.astype(jnp.int32), axis=1)
+    return st._replace(
+        visited=pop,
+        beam_occupancy=jnp.sum(finite.astype(jnp.int32), axis=1),
+        hit_max_iters=jnp.any(~beam_exp & finite, axis=1),
+    )
+
+
+def combine_stats(a: SearchStats, b: SearchStats) -> SearchStats:
+    """Elementwise merge of two instantiations serving DISJOINT row sets
+    (the planner's graph + wide searches: a row masked out of one search
+    contributes exact zeros there, so addition is selection). Hop tallies
+    are zero-padded to the longer iteration axis."""
+    H = max(a.hop_valid.shape[0], b.hop_valid.shape[0])
+
+    def pad(x):
+        return jnp.pad(x, (0, H - x.shape[0]))
+
+    return SearchStats(
+        iters=a.iters + b.iters,
+        expanded=a.expanded + b.expanded,
+        cand_total=a.cand_total + b.cand_total,
+        cand_valid=a.cand_valid + b.cand_valid,
+        kept=a.kept + b.kept,
+        visited=a.visited + b.visited,
+        beam_occupancy=a.beam_occupancy + b.beam_occupancy,
+        hit_max_iters=a.hit_max_iters | b.hit_max_iters,
+        delta_valid=a.delta_valid + b.delta_valid,
+        hop_valid=pad(a.hop_valid) + pad(b.hop_valid),
+        hop_total=pad(a.hop_total) + pad(b.hop_total),
+    )
+
+
+def stats_to_host(st: SearchStats) -> SearchStats:
+    """Materialize every counter as a numpy array (one device sync)."""
+    return SearchStats(*(np.asarray(x) for x in st))
+
+
+def per_query_dict(st: SearchStats) -> dict:
+    """The [B]-shaped fields as {name: array} — the sharded steps' stats
+    output (hop tallies are single-host only)."""
+    return {
+        name: getattr(st, name).astype(jnp.int32)
+        for name in PER_QUERY_FIELDS
+    }
+
+
+def record_search_stats(
+    st,
+    *,
+    registry: Optional[MetricsRegistry] = None,
+    n_real: Optional[int] = None,
+) -> None:
+    """Fold one batch's device counters into the host metrics registry.
+
+    ``st`` is a ``SearchStats`` (host or device arrays) or the sharded
+    steps' ``per_query_dict``. ``n_real`` truncates to the first rows when
+    the batch carries sentinel padding (``RequestBatcher``) so no-op rows
+    don't dilute the per-query histograms."""
+    reg = resolve(registry)
+    get = (st.get if isinstance(st, dict) else
+           lambda name, default=None: getattr(st, name, default))
+
+    def col(name):
+        v = get(name)
+        if v is None:
+            return None
+        v = np.asarray(v)
+        return v[:n_real] if n_real is not None else v
+
+    iters = col("iters")
+    if iters is None or iters.size == 0:
+        return
+    expanded = col("expanded")
+    cand_total = col("cand_total")
+    cand_valid = col("cand_valid")
+    reg.counter(
+        "repro_search_queries_total", "queries with device counters recorded"
+    ).inc(int(iters.size))
+    for name, v in (
+        ("repro_search_iterations_total", iters),
+        ("repro_search_nodes_expanded_total", expanded),
+        ("repro_search_candidates_examined_total", cand_total),
+        ("repro_search_candidates_valid_total", cand_valid),
+        ("repro_search_candidates_kept_total", col("kept")),
+        ("repro_search_delta_candidates_valid_total", col("delta_valid")),
+    ):
+        if v is not None:
+            reg.counter(name, "batched device traversal counter").inc(
+                float(np.sum(v, dtype=np.int64))
+            )
+    for name, v in (
+        ("repro_search_expanded_per_query", expanded),
+        ("repro_search_visited_per_query", col("visited")),
+        ("repro_search_beam_occupancy", col("beam_occupancy")),
+    ):
+        if v is not None:
+            h = reg.histogram(name, "per-query traversal distribution",
+                              buckets=COUNT_BUCKETS)
+            h.observe_many(float(x) for x in v)
+    if cand_total is not None and cand_valid is not None:
+        frac = reg.histogram(
+            "repro_search_valid_fraction",
+            "valid candidates / examined candidates per query",
+            buckets=FRACTION_BUCKETS,
+        )
+        mask = cand_total > 0
+        frac.observe_many(
+            (cand_valid[mask] / cand_total[mask]).astype(float)
+        )
+    hit = col("hit_max_iters")
+    if hit is not None:
+        term = reg.counter(
+            "repro_search_terminations_total", "per-query stop cause"
+        )
+        hit = hit.astype(bool)
+        started = iters > 0
+        n_cap = int(np.count_nonzero(hit))
+        n_conv = int(np.count_nonzero(~hit & started))
+        n_empty = int(np.count_nonzero(~hit & ~started))
+        if n_cap:
+            term.inc(n_cap, cause="iteration_cap")
+        if n_conv:
+            term.inc(n_conv, cause="beam_converged")
+        if n_empty:
+            term.inc(n_empty, cause="no_entry")

@@ -1,0 +1,89 @@
+"""Profiling hooks: span annotation + device trace capture.
+
+``trace_span`` is the one instrumentation primitive hot host code uses: it
+annotates the span in the XLA/perfetto timeline via
+``jax.profiler.TraceAnnotation`` when the profiler is importable (so a
+captured device trace shows host phases interleaved with device launches)
+and ALWAYS times the span into the ``repro_span_seconds`` histogram, so the
+same call sites feed Prometheus whether or not a trace is being captured.
+
+``capture_trace`` wraps ``jax.profiler.start_trace``/``stop_trace`` for an
+on-demand capture window (benchmarks, incident debugging) and degrades to a
+timed no-op when the profiler backend is unavailable — callers never need
+to guard on platform.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Iterator, Optional
+
+from repro.obs.metrics import MetricsRegistry, resolve
+
+SPAN_METRIC = "repro_span_seconds"
+
+
+def _trace_annotation(name: str):
+    """``jax.profiler.TraceAnnotation`` or None when unavailable."""
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation(name)
+    except Exception:
+        return None
+
+
+@contextlib.contextmanager
+def trace_span(
+    name: str,
+    registry: Optional[MetricsRegistry] = None,
+    **labels: str,
+) -> Iterator[None]:
+    """Time a host-side span into ``repro_span_seconds{span=name,...}``,
+    annotating the profiler timeline when one is attached."""
+    reg = resolve(registry)
+    ann = _trace_annotation(name)
+    t0 = time.perf_counter()
+    if ann is not None:
+        ann.__enter__()
+    try:
+        yield
+    finally:
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        reg.histogram(
+            SPAN_METRIC, "host-side span wall-clock duration"
+        ).observe(time.perf_counter() - t0, span=name, **labels)
+
+
+@contextlib.contextmanager
+def capture_trace(
+    logdir: str,
+    registry: Optional[MetricsRegistry] = None,
+) -> Iterator[bool]:
+    """Capture a device trace window into ``logdir`` (view with perfetto /
+    tensorboard). Yields True when a real profiler trace is running, False
+    on the degraded (timing-only) path. Either way the window's duration
+    lands in ``repro_span_seconds{span="capture_trace"}``."""
+    reg = resolve(registry)
+    started = False
+    try:
+        import jax
+
+        jax.profiler.start_trace(str(logdir))
+        started = True
+    except Exception:
+        started = False
+    t0 = time.perf_counter()
+    try:
+        yield started
+    finally:
+        if started:
+            try:
+                import jax
+
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+        reg.histogram(
+            SPAN_METRIC, "host-side span wall-clock duration"
+        ).observe(time.perf_counter() - t0, span="capture_trace")

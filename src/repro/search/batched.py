@@ -64,6 +64,12 @@ import numpy as np
 
 from repro.core.predicates import get_relation
 from repro.kernels import ops
+from repro.obs.stats import (
+    accumulate_iteration,
+    finalize_stats,
+    init_search_stats,
+    stats_to_host,
+)
 from repro.search.device_graph import DeviceGraph
 
 _INF = jnp.inf
@@ -105,7 +111,8 @@ def prepare_states(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "beam", "max_iters", "use_ref", "fused", "expand", "unroll_iters"
+        "k", "beam", "max_iters", "use_ref", "fused", "expand",
+        "unroll_iters", "stats",
     ),
 )
 def _batched_search_core(
@@ -125,7 +132,8 @@ def _batched_search_core(
     unroll_iters: int = 0,
     scales: jnp.ndarray | None = None,   # [n] f32: int8-quantized vectors
     norms: jnp.ndarray | None = None,    # [n] f32: cached ‖c‖² (fused path)
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    stats: bool = False,  # also return a SearchStats traversal-counter pytree
+) -> Tuple[jnp.ndarray, ...]:
     n, D = vectors.shape
     B = q.shape[0]
     E = nbr.shape[1]
@@ -159,7 +167,7 @@ def _batched_search_core(
     beam_d = beam_d.at[:, 0].set(jnp.where(has_ep, d_ep, _INF))
 
     def cond(carry):
-        _, beam_d_, beam_exp_, _, it = carry
+        beam_d_, beam_exp_, it = carry[1], carry[2], carry[4]
         active = jnp.any(~beam_exp_ & jnp.isfinite(beam_d_))
         return jnp.logical_and(it < max_iters, active)
 
@@ -188,7 +196,7 @@ def _batched_search_core(
         visited = visited.at[jnp.arange(B), ep_safe >> 5].add(ep_bit)
 
         def body(carry):
-            beam_ids_, beam_d_, beam_exp_, visited_, it = carry
+            beam_ids_, beam_d_, beam_exp_, visited_, it = carry[:5]
             # 1. best M unexpanded entries per query
             cand_d = jnp.where(beam_exp_, _INF, beam_d_)
             if M == 1:
@@ -233,7 +241,13 @@ def _batched_search_core(
                     jnp.uint32(0),
                 )
                 visited_ = visited_.at[rows, ids_safe >> 5].add(bits)
-                return (beam_ids_, beam_d_, beam_exp_, visited_, it + 1)
+                out = (beam_ids_, beam_d_, beam_exp_, visited_, it + 1)
+                if stats:
+                    out += (accumulate_iteration(
+                        carry[5], live=live, nb=nb, d_new=d_new, keep=keep,
+                        it=it,
+                    ),)
+                return out
             if labels is None:
                 lb = jnp.zeros((B, ME, 4), dtype=jnp.int32)
             else:
@@ -273,14 +287,19 @@ def _batched_search_core(
                 (all_d, all_ids, all_exp), dimension=1, num_keys=1,
                 is_stable=True,
             )
-            return (si[:, :L], sd[:, :L], se[:, :L], visited_, it + 1)
+            out = (si[:, :L], sd[:, :L], se[:, :L], visited_, it + 1)
+            if stats:
+                out += (accumulate_iteration(
+                    carry[5], live=live, nb=nb, d_new=d_new, keep=keep, it=it,
+                ),)
+            return out
 
     else:
         visited = jnp.zeros((B, n), dtype=bool)
         visited = visited.at[jnp.arange(B), ep_safe].max(has_ep)
 
         def body(carry):
-            beam_ids_, beam_d_, beam_exp_, visited_, it = carry
+            beam_ids_, beam_d_, beam_exp_, visited_, it = carry[:5]
             # 1. best unexpanded entry per query
             cand_d = jnp.where(beam_exp_, _INF, beam_d_)
             j = jnp.argmin(cand_d, axis=1)
@@ -322,9 +341,17 @@ def _batched_search_core(
             sd, si, se = jax.lax.sort(
                 (all_d, all_ids, all_exp), dimension=1, num_keys=1, is_stable=True
             )
-            return (si[:, :L], sd[:, :L], se[:, :L], visited_, it + 1)
+            out = (si[:, :L], sd[:, :L], se[:, :L], visited_, it + 1)
+            if stats:
+                out += (accumulate_iteration(
+                    carry[5], live=live[:, None], nb=nb, d_new=d_new,
+                    keep=keep, it=it,
+                ),)
+            return out
 
     carry = (beam_ids, beam_d, beam_exp, visited, jnp.int32(0))
+    if stats:
+        carry += (init_search_stats(B, max_iters),)
     if unroll_iters > 0:
         # cost-probe mode: a fixed number of python-unrolled expansions so
         # HLO cost analysis sees per-iteration work (a while body is counted
@@ -333,7 +360,12 @@ def _batched_search_core(
             carry = body(carry)
     else:
         carry = jax.lax.while_loop(cond, body, carry)
-    beam_ids, beam_d, beam_exp, visited, _ = carry
+    beam_ids, beam_d, beam_exp, visited = carry[:4]
+    if stats:
+        st = finalize_stats(
+            carry[5], beam_d=beam_d, beam_exp=beam_exp, visited=visited
+        )
+        return beam_ids[:, :k], beam_d[:, :k], st
     return beam_ids[:, :k], beam_d[:, :k]
 
 
@@ -351,7 +383,8 @@ def batched_udg_search(
     expand: int = 1,
     plan: str = "graph",
     packed: bool | None = None,
-) -> Tuple[np.ndarray, np.ndarray]:
+    stats: bool = False,
+) -> Tuple[np.ndarray, ...]:
     """End-to-end batched query: canonicalize on host, search on device.
 
     Device arrays come from the graph's memoized ``dg.device()`` bundle —
@@ -369,20 +402,23 @@ def batched_udg_search(
     pure beam search (the planner's parity oracle); ``"auto"`` /
     ``"wide"`` / ``"brute"`` route through the selectivity-aware executor
     (``repro.exec.execute_batch``), which dispatches mixed-plan batches
-    through one compiled program."""
+    through one compiled program.
+
+    ``stats=True`` appends a host-side :class:`repro.obs.SearchStats`
+    pytree of device traversal counters to the return tuple."""
     if plan != "graph":
         from repro.exec import execute_batch
 
         return execute_batch(
             dg, q, s_q, t_q, k=k, beam=beam, max_iters=max_iters,
             use_ref=use_ref, fused=fused, expand=expand, plan=plan,
-            packed=packed,
+            packed=packed, stats=stats,
         )
     states, ep = prepare_states(dg, s_q, t_q)
     dev = dg.device()
     labels = dg.serving_labels(fused=fused, packed=packed)
     norms = dev.norms if fused else None
-    ids, d = _batched_search_core(
+    out = _batched_search_core(
         dev.table,
         dev.nbr,
         labels,
@@ -397,7 +433,11 @@ def batched_udg_search(
         expand=expand,
         scales=dev.scales,
         norms=norms,
+        stats=stats,
     )
+    ids, d = out[0], out[1]
+    if stats:
+        return np.asarray(ids), np.asarray(d), stats_to_host(out[2])
     return np.asarray(ids), np.asarray(d)
 
 

@@ -3,6 +3,9 @@
 ``RequestBatcher`` packs asynchronous (vector, interval) requests into
 fixed-size batches (padding with sentinel no-op queries) so the jitted
 serving step sees one static shape — the standard recipe for TPU serving.
+A partial batch flushes immediately by default (``timeout_s=0.0``); with a
+positive ``timeout_s`` it is held back until the oldest request has waited
+that long (or ``force=True``), trading per-request latency for occupancy.
 
 ``SpeculativeDispatcher`` models the shard-straggler policy used at fleet
 scale: each shard RPC gets a deadline; shards that miss it are speculatively
@@ -15,6 +18,13 @@ fleet the same policy object wraps the per-pod RPC layer.
 jitted two-tier streaming search, plus epoch-swapped background compaction —
 epoch N keeps serving while epoch N+1 builds on a worker thread, then the
 swap is atomic and shape-stable (no recompile).
+
+Every stage reports into the ``repro.obs`` metrics registry (queue depth,
+batch occupancy and padding waste, per-request latency, speculative
+re-dispatch outcomes, compaction events, epoch age); ``StreamingServer``
+can additionally thread the device-side traversal counters
+(``stats=True``) into the same registry. See ``docs/OBSERVABILITY.md``
+for the catalog.
 """
 from __future__ import annotations
 
@@ -25,6 +35,15 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import (
+    COUNT_BUCKETS,
+    LATENCY_BUCKETS_S,
+    MetricsRegistry,
+    resolve,
+)
+from repro.obs.stats import record_search_stats
+from repro.obs.trace import trace_span
+
 
 @dataclasses.dataclass
 class Request:
@@ -32,22 +51,46 @@ class Request:
     s_q: float
     t_q: float
     req_id: int
+    t_submit: float = 0.0
 
 
 class RequestBatcher:
-    """Fixed-shape batcher with sentinel padding."""
+    """Fixed-shape batcher with sentinel padding.
 
-    def __init__(self, batch_size: int, dim: int, *, timeout_s: float = 0.01):
+    ``timeout_s=0.0`` (the default) flushes a partial batch as soon as it is
+    asked for — the pre-timeout behavior. A positive ``timeout_s`` holds a
+    partial batch until its oldest request has aged past the timeout (full
+    batches always flush; ``next_batch(force=True)`` overrides the hold).
+    """
+
+    def __init__(
+        self,
+        batch_size: int,
+        dim: int,
+        *,
+        timeout_s: float = 0.0,
+        registry: Optional[MetricsRegistry] = None,
+    ):
         self.batch_size = batch_size
         self.dim = dim
         self.timeout_s = timeout_s
         self._pending: List[Request] = []
         self._next_id = 0
+        self._reg = resolve(registry)
+        # submit times of the requests in the most recent batch, aligned
+        # with its req_ids — read by StreamingServer for request latency
+        self.last_submit_times: List[float] = []
 
     def submit(self, qvec: np.ndarray, s_q: float, t_q: float) -> int:
         rid = self._next_id
         self._next_id += 1
-        self._pending.append(Request(np.asarray(qvec, np.float32), s_q, t_q, rid))
+        self._pending.append(Request(
+            np.asarray(qvec, np.float32), s_q, t_q, rid,
+            t_submit=time.monotonic(),
+        ))
+        self._reg.gauge(
+            "repro_batcher_queue_depth", "requests waiting to be batched"
+        ).set(len(self._pending))
         return rid
 
     @property
@@ -55,11 +98,19 @@ class RequestBatcher:
         return len(self._pending)
 
     def next_batch(
-        self,
+        self, force: bool = False,
     ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, List[int], int]]:
-        """Returns (q [B,d], s_q [B], t_q [B], req_ids, n_real) or None."""
+        """Returns (q [B,d], s_q [B], t_q [B], req_ids, n_real) or None
+        (empty queue, or a partial batch still inside its timeout window)."""
         if not self._pending:
             return None
+        now = time.monotonic()
+        timed_out = False
+        if len(self._pending) < self.batch_size and not force:
+            age = now - self._pending[0].t_submit
+            if self.timeout_s > 0 and age < self.timeout_s:
+                return None
+            timed_out = self.timeout_s > 0
         take = self._pending[: self.batch_size]
         self._pending = self._pending[self.batch_size:]
         n = len(take)
@@ -71,11 +122,42 @@ class RequestBatcher:
             q[i] = r.qvec
             s_q[i] = r.s_q
             t_q[i] = r.t_q
+        self.last_submit_times = [r.t_submit for r in take]
+        self._reg.gauge(
+            "repro_batcher_queue_depth", "requests waiting to be batched"
+        ).set(len(self._pending))
+        self._reg.counter(
+            "repro_batches_total", "batches emitted"
+        ).inc()
+        self._reg.counter(
+            "repro_batch_padding_rows_total", "sentinel no-op rows emitted"
+        ).inc(B - n)
+        if timed_out:
+            self._reg.counter(
+                "repro_batch_timeout_flushes_total",
+                "partial batches flushed by the age timeout",
+            ).inc()
+        self._reg.histogram(
+            "repro_batch_occupancy", "real requests per emitted batch",
+            buckets=COUNT_BUCKETS,
+        ).observe(n)
+        wait = self._reg.histogram(
+            "repro_batch_queue_wait_seconds",
+            "submit-to-batch queueing delay",
+            buckets=LATENCY_BUCKETS_S,
+        )
+        wait.observe_many(now - r.t_submit for r in take)
         return q, s_q, t_q, [r.req_id for r in take], n
 
 
 class SpeculativeDispatcher:
-    """Deadline-based speculative re-dispatch across shard replicas."""
+    """Deadline-based speculative re-dispatch across shard replicas.
+
+    Accounting: ``deadline_misses`` / ``failures`` split the re-dispatch
+    cause per shard (slow vs raised), ``respeculated`` keeps the combined
+    historical list; everything also lands in the metrics registry
+    (``repro_speculative_dispatch_total{outcome=}`` and the per-shard call
+    latency histogram)."""
 
     def __init__(
         self,
@@ -83,24 +165,48 @@ class SpeculativeDispatcher:
         replicas: Sequence[Callable[..., object]],
         *,
         deadline_s: float,
+        registry: Optional[MetricsRegistry] = None,
     ):
         assert len(primary) == len(replicas)
         self.primary = list(primary)
         self.replicas = list(replicas)
         self.deadline_s = deadline_s
         self.respeculated: List[int] = []
+        self.deadline_misses: List[int] = []
+        self.failures: List[int] = []
+        self._reg = resolve(registry)
 
     def call_shard(self, shard: int, *args):
+        disp = self._reg.counter(
+            "repro_speculative_dispatch_total",
+            "shard calls by outcome (primary / replica win after a "
+            "deadline miss or failure)",
+        )
+        lat = self._reg.histogram(
+            "repro_shard_call_seconds", "per-shard dispatch wall clock",
+            buckets=LATENCY_BUCKETS_S,
+        )
         t0 = time.perf_counter()
+        failed = False
         try:
             out = self.primary[shard](*args)
             if time.perf_counter() - t0 <= self.deadline_s:
+                disp.inc(outcome="primary")
+                lat.observe(time.perf_counter() - t0, shard=str(shard))
                 return out
         except Exception:
-            pass
+            failed = True
         # deadline miss or failure: speculative retry on the replica
         self.respeculated.append(shard)
-        return self.replicas[shard](*args)
+        if failed:
+            self.failures.append(shard)
+            disp.inc(outcome="replica_win_failure")
+        else:
+            self.deadline_misses.append(shard)
+            disp.inc(outcome="replica_win_deadline")
+        out = self.replicas[shard](*args)
+        lat.observe(time.perf_counter() - t0, shard=str(shard))
+        return out
 
     def call_all(self, nshards: int, *args) -> List[object]:
         return [self.call_shard(i, *args) for i in range(nshards)]
@@ -117,6 +223,11 @@ class StreamingServer:
     the epoch atomically (queries in flight hold a consistent snapshot of
     exactly one epoch — the swap replaces whole-epoch references under the
     index lock).
+
+    ``stats=True`` asks the index for the device-side ``SearchStats`` on
+    every step and folds the real (non-sentinel) rows into the metrics
+    registry — a second jit cache entry, exercised once, then stable across
+    epoch swaps and plan mixes like the stats-off program.
     """
 
     def __init__(
@@ -130,6 +241,8 @@ class StreamingServer:
         fused: bool = True,
         plan: str = "auto",
         timeout_s: float = 0.01,
+        registry: Optional[MetricsRegistry] = None,
+        stats: bool = False,
     ):
         self.index = index
         self.k = k
@@ -139,10 +252,16 @@ class StreamingServer:
         # execution-strategy selection per query (repro.exec planner):
         # "auto" = selectivity-aware, "graph" = pre-planner parity oracle
         self.plan = plan
-        self.batcher = RequestBatcher(batch_size, index.dim, timeout_s=timeout_s)
+        self.stats = stats
+        self._reg = resolve(registry)
+        self.batcher = RequestBatcher(
+            batch_size, index.dim, timeout_s=timeout_s, registry=registry,
+        )
         self._worker: Optional[threading.Thread] = None
         self._worker_err: Optional[BaseException] = None
         self.compactions: List[object] = []
+        self._epoch_seen = index.epoch
+        self._epoch_swap_t = time.monotonic()
 
     # --- mutations (pass-through) --------------------------------------------
 
@@ -157,22 +276,52 @@ class StreamingServer:
     def submit(self, qvec: np.ndarray, s_q: float, t_q: float) -> int:
         return self.batcher.submit(qvec, s_q, t_q)
 
-    def step(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        """Drain one batch; returns {req_id: (ext_ids [k], dists [k])}."""
-        batch = self.batcher.next_batch()
-        if batch is None:
-            return {}
-        q, s_q, t_q, req_ids, n_real = batch
-        ids, d = self.index.search(
-            q, s_q, t_q, k=self.k, beam=self.beam, use_ref=self.use_ref,
-            fused=self.fused, plan=self.plan,
-        )
-        return {rid: (ids[i], d[i]) for i, rid in enumerate(req_ids[:n_real])}
+    def _observe_epoch(self) -> None:
+        epoch = self.index.epoch
+        if epoch != self._epoch_seen:
+            self._epoch_seen = epoch
+            self._epoch_swap_t = time.monotonic()
+        self._reg.gauge("repro_epoch", "current serving epoch").set(epoch)
+        self._reg.gauge(
+            "repro_epoch_age_seconds", "time since the last epoch swap"
+        ).set(time.monotonic() - self._epoch_swap_t)
+
+    def step(self, force: bool = False) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        """Drain one batch; returns {req_id: (ext_ids [k], dists [k])}.
+        ``force=True`` flushes a partial batch before its timeout."""
+        with trace_span("serve_step", self._reg):
+            batch = self.batcher.next_batch(force=force)
+            if batch is None:
+                self._observe_epoch()
+                return {}
+            q, s_q, t_q, req_ids, n_real = batch
+            out = self.index.search(
+                q, s_q, t_q, k=self.k, beam=self.beam, use_ref=self.use_ref,
+                fused=self.fused, plan=self.plan, return_stats=self.stats,
+            )
+            if self.stats:
+                ids, d, st = out
+                record_search_stats(st, registry=self._reg, n_real=n_real)
+            else:
+                ids, d = out
+            now = time.monotonic()
+            lat = self._reg.histogram(
+                "repro_request_latency_seconds",
+                "submit-to-result latency per request",
+                buckets=LATENCY_BUCKETS_S,
+            )
+            lat.observe_many(
+                now - t for t in self.batcher.last_submit_times[:n_real]
+            )
+            self._observe_epoch()
+            return {
+                rid: (ids[i], d[i]) for i, rid in enumerate(req_ids[:n_real])
+            }
 
     def drain(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         while self.batcher.pending:
-            out.update(self.step())
+            out.update(self.step(force=True))
         return out
 
     # --- background compaction ------------------------------------------------
@@ -190,14 +339,29 @@ class StreamingServer:
         if not self.index.should_compact():
             return False
         job = self.index.begin_compaction()
+        self._reg.counter(
+            "repro_compactions_total", "compaction lifecycle events"
+        ).inc(event="started")
+        t0 = time.monotonic()
 
         def run():
             try:
                 self.index.build_epoch(job)
                 self.compactions.append(self.index.finish_compaction(job))
+                self._reg.counter(
+                    "repro_compactions_total", "compaction lifecycle events"
+                ).inc(event="completed")
+                self._reg.histogram(
+                    "repro_compaction_seconds",
+                    "background build+swap wall clock",
+                    buckets=LATENCY_BUCKETS_S,
+                ).observe(time.monotonic() - t0)
             except BaseException as exc:  # surfaced by join_compaction
                 self._worker_err = exc
                 self.index.abort_compaction()
+                self._reg.counter(
+                    "repro_compactions_total", "compaction lifecycle events"
+                ).inc(event="aborted")
 
         self._worker = threading.Thread(target=run, name="udg-compaction", daemon=True)
         self._worker.start()

@@ -36,6 +36,8 @@ from repro.exec import (
     plan_queries,
 )
 from repro.exec.executor import planned_exec_core
+from repro.obs.stats import PER_QUERY_FIELDS as _PER_QUERY_STAT_FIELDS
+from repro.obs.stats import per_query_dict
 from repro.search.batched import _batched_search_core
 from repro.search.device_graph import export_device_graph, unpack_labels_device
 from repro.distributed.compat import shard_map as _shard_map
@@ -263,6 +265,7 @@ def make_serving_step(
     int8_vectors: bool = False,
     fused: bool = True,
     expand: int = 1,
+    stats: bool = False,
 ):
     """Build the jitted shard_map serving step for ``mesh``.
 
@@ -275,6 +278,11 @@ def make_serving_step(
     ``fused`` selects the gather-fused beam expansion (in-kernel HBM gather
     off the cached ``norms``, bit-packed visited); ``expand`` widens each
     iteration to the best M unexpanded beam entries.
+
+    ``stats=True`` appends a third output: {field: [B] int32} per-query
+    traversal counters (the ``SearchStats`` [B]-shaped fields) psum'd over
+    the ``model`` axis, i.e. fleet-wide totals per query
+    (``hit_max_iters`` becomes the *count of shards* that hit the cap).
     """
     max_iters = max_iters if max_iters is not None else 2 * beam
     batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
@@ -288,26 +296,40 @@ def make_serving_step(
         # cached norms must match the rows the kernel scores: ShardedIndex
         # stacks f32-row norms, so on the int8 path they are dropped and the
         # core recomputes sum(c_q^2)*scale^2 (dequantized norms) per batch
-        ids_l, d_l = _batched_search_core(
+        out = _batched_search_core(
             vec, nbr, lab, q, states, ep,
             k=k, beam=beam, max_iters=max_iters, use_ref=use_ref_kernel,
             fused=fused, expand=expand,
             unroll_iters=unroll_iters,
             scales=scales[0] if scales is not None else None,
             norms=None if int8_vectors else nrm,
+            stats=stats,
         )
+        ids_l, d_l = out[0], out[1]
         shard_id = jax.lax.axis_index("model")
         n_l = vec.shape[0]
         gids = jnp.where(ids_l >= 0, ids_l * 1 + shard_id * n_l, -1)
         d_l = jnp.where(ids_l >= 0, d_l, jnp.inf)
-        return _merge_across_shards(mesh, gids, d_l, k=k, merge=merge)
+        merged = _merge_across_shards(mesh, gids, d_l, k=k, merge=merge)
+        if stats:
+            pq = {
+                name: jax.lax.psum(v, "model")
+                for name, v in per_query_dict(out[2]).items()
+            }
+            return merged + (pq,)
+        return merged
 
     shard_spec = P("model")
     qspec = P(batch_axes)
     in_specs = (shard_spec,) * 9 + (qspec, qspec, qspec)
     if int8_vectors:
         in_specs = in_specs + (shard_spec,)
-    fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
+    out_specs = (qspec, qspec)
+    if stats:
+        out_specs = out_specs + (
+            {name: qspec for name in _PER_QUERY_STAT_FIELDS},
+        )
+    fn = _shard_map(shard_fn, mesh, in_specs, out_specs)
     return jax.jit(fn)
 
 
@@ -660,6 +682,7 @@ def make_streaming_serving_step(
     use_ref_kernel: bool = True,
     fused: bool = True,
     expand: int = 1,
+    stats: bool = False,
 ):
     """Jitted shard_map step for streaming serving: two-tier search per
     shard (tombstone-masked gather-fused graph beam + gather-fused delta
@@ -671,6 +694,10 @@ def make_streaming_serving_step(
       (vectors, nbr, labels, norms, live, ext, dvec, dlab, dids, dext,
        U_X, U_Y, num_y, entry_node, entry_y_rank,
        q, xq, yq, dstate) -> (ext_ids [B, k], dists [B, k])
+
+    ``stats=True`` appends a third output: {field: [B] int32} per-query
+    counters psum'd over ``model`` — graph-tier traversal totals plus
+    ``delta_valid`` (delta-tier candidates passing the filter, all shards).
     """
     from repro.stream.search import two_tier_merge
 
@@ -685,27 +712,41 @@ def make_streaming_serving_step(
         UX, UY, ent, enty = UX[0], UY[0], ent[0], enty[0]
         states, ep = _canonicalize_local(UX, UY, num_y[0], ent, enty, xq, yq)
         q32 = q.astype(jnp.float32)
-        ids_l, d_l = _batched_search_core(
+        core = _batched_search_core(
             vec, nbr, lab, q32, states, ep,
             k=beam, beam=beam, max_iters=max_iters, use_ref=use_ref_kernel,
-            fused=fused, expand=expand, norms=nrm,
+            fused=fused, expand=expand, norms=nrm, stats=stats,
         )
-        i_k, d_k = two_tier_merge(
+        ids_l, d_l = core[0], core[1]
+        merged = two_tier_merge(
             ids_l, d_l, live, ext, q32, dvec, dlab, dids, dext, dstate,
             k=k, use_ref=use_ref_kernel, fused=fused,
+            st=core[2] if stats else None,
         )
+        i_k, d_k = merged[0], merged[1]
         B = q.shape[0]
         all_i = jax.lax.all_gather(i_k, "model", axis=1)    # [B, S, k]
         all_d = jax.lax.all_gather(d_k, "model", axis=1)
         cat_d = all_d.reshape(B, -1)
         cat_i = all_i.reshape(B, -1)
         nd, ni = jax.lax.sort((cat_d, cat_i), dimension=1, num_keys=1)
+        if stats:
+            pq = {
+                name: jax.lax.psum(v, "model")
+                for name, v in per_query_dict(merged[2]).items()
+            }
+            return ni[:, :k], nd[:, :k], pq
         return ni[:, :k], nd[:, :k]
 
     shard_spec = P("model")
     qspec = P(batch_axes)
     in_specs = (shard_spec,) * 15 + (qspec,) * 4
-    fn = _shard_map(shard_fn, mesh, in_specs, (qspec, qspec))
+    out_specs = (qspec, qspec)
+    if stats:
+        out_specs = out_specs + (
+            {name: qspec for name in _PER_QUERY_STAT_FIELDS},
+        )
+    fn = _shard_map(shard_fn, mesh, in_specs, out_specs)
     return jax.jit(fn)
 
 
@@ -733,7 +774,7 @@ def serve_streaming_batch(
     dstate = query_key_state(rel, s_q, t_q)
     if step is None:
         step = make_streaming_serving_step(mesh, k=k, beam=beam)
-    ids, d = step(
+    out = step(
         stacked["vectors"], stacked["nbr"], stacked["labels"],
         stacked["norms"], stacked["live"], stacked["ext"],
         stacked["dvec"], stacked["dlab"], stacked["dids"], stacked["dext"],
@@ -744,4 +785,7 @@ def serve_streaming_batch(
         np.asarray(yq, np.float32),
         dstate,
     )
-    return np.asarray(ids), np.asarray(d)
+    if len(out) == 3:   # a step built with stats=True: per-query counters
+        return (np.asarray(out[0]), np.asarray(out[1]),
+                {name: np.asarray(v) for name, v in out[2].items()})
+    return np.asarray(out[0]), np.asarray(out[1])

@@ -38,6 +38,7 @@ from repro.exec import (
     mask_entry_points,
     plan_queries,
 )
+from repro.obs.stats import stats_to_host
 from repro.search.batched import prepare_states_extended
 from repro.search.device_graph import (
     RANK_LIMIT,
@@ -447,9 +448,13 @@ class StreamingIndex:
         fused: bool = True,
         plan: str = "auto",
         planner_config: Optional[PlannerConfig] = None,
-    ) -> Tuple[np.ndarray, np.ndarray]:
+        return_stats: bool = False,
+    ) -> Tuple[np.ndarray, ...]:
         """Two-tier search; returns (external ids [B, k], sq dists [B, k]),
         -1 padded. A 1-D query vector is treated as a batch of one.
+        ``return_stats=True`` appends a host :class:`repro.obs.SearchStats`
+        (graph-tier traversal counters + per-query ``delta_valid``) to the
+        return tuple.
 
         ``plan="auto"`` routes the graph tier through the selectivity-aware
         executor (per-query graph / wide-beam / brute-valid, one compiled
@@ -498,12 +503,13 @@ class StreamingIndex:
         dstate = query_key_state(self._rel, s_q, t_q)
         mi = max_iters if max_iters is not None else 2 * beam
         if plan == "graph":
-            ids, d = streaming_search_core(
+            out = streaming_search_core(
                 dev[0], dev[1], dev[2], *mut,
                 jnp.asarray(q), jnp.asarray(states), jnp.asarray(ep),
                 jnp.asarray(dstate),
                 k=k, beam=beam, max_iters=mi,
                 use_ref=use_ref, fused=fused, norms=dev_norms,
+                stats=return_stats,
             )
         else:
             cfg = planner_config or default_planner_config()
@@ -524,7 +530,7 @@ class StreamingIndex:
                 plans, bf_ids = pb.plans, pb.bf_ids
             ep_graph, ep_wide = mask_entry_points(ep, plans)
             wide_beam = max(beam * cfg.wide_beam_scale, beam)
-            ids, d = planned_streaming_search_core(
+            out = planned_streaming_search_core(
                 dev[0], dev[1], dev[2], *mut,
                 jnp.asarray(q), jnp.asarray(states),
                 jnp.asarray(ep_graph), jnp.asarray(ep_wide),
@@ -534,10 +540,15 @@ class StreamingIndex:
                 max_iters=mi, wide_max_iters=mi * cfg.wide_beam_scale,
                 use_ref=use_ref, fused=fused,
                 wide_expand=cfg.wide_expand if fused else 1,
-                norms=dev_norms,
+                norms=dev_norms, stats=return_stats,
             )
-        ids = np.asarray(ids)
-        d = np.asarray(d)
+        ids = np.asarray(out[0])
+        d = np.asarray(out[1])
+        if return_stats:
+            st = stats_to_host(out[2])
+            if single:
+                return ids[0], d[0], st
+            return ids, d, st
         if single:
             return ids[0], d[0]
         return ids, d

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.exec.executor import planned_exec_core
 from repro.kernels import ops
+from repro.obs.stats import SearchStats
 from repro.search.batched import _batched_search_core
 
 
@@ -50,10 +51,13 @@ def two_tier_merge(
     k: int,
     use_ref: bool,
     fused: bool = True,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    st: SearchStats | None = None,   # graph-tier stats to annotate
+) -> Tuple[jnp.ndarray, ...]:
     """Tombstone-mask the graph beam, scan the delta tier through the fused
     kernel, and merge to the best k external ids. Shared by the single-host
-    streaming step and the per-shard body of the mesh serving step."""
+    streaming step and the per-shard body of the mesh serving step. When a
+    graph-tier ``st`` is passed, it is returned with ``delta_valid`` set to
+    the per-query count of delta-tier candidates passing the filter."""
     n = live.shape[0]
     B, d = q.shape
     C = dvec.shape[0]
@@ -81,11 +85,17 @@ def two_tier_merge(
     all_d = jnp.concatenate([d_g, d_d], axis=1)
     all_e = jnp.concatenate([eid_g, eid_d], axis=1)
     sd, se = jax.lax.sort((all_d, all_e), dimension=1, num_keys=1)
+    if st is not None:
+        st = st._replace(
+            delta_valid=jnp.sum(jnp.isfinite(d_d).astype(jnp.int32), axis=1)
+        )
+        return se[:, :k], sd[:, :k], st
     return se[:, :k], sd[:, :k]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "beam", "max_iters", "use_ref", "fused")
+    jax.jit,
+    static_argnames=("k", "beam", "max_iters", "use_ref", "fused", "stats"),
 )
 def streaming_search_core(
     vectors: jnp.ndarray,      # [N, d]  compacted tier (capacity-padded)
@@ -108,16 +118,19 @@ def streaming_search_core(
     use_ref: bool,
     fused: bool = True,
     norms: jnp.ndarray | None = None,   # [N] f32 cached graph-tier norms
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    stats: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
     q = q.astype(jnp.float32)
-    ids_g, d_g = _batched_search_core(
+    out = _batched_search_core(
         vectors, nbr, labels, q, states, ep,
         k=beam, beam=beam, max_iters=max_iters, use_ref=use_ref,
-        fused=fused, norms=norms,
+        fused=fused, norms=norms, stats=stats,
     )
+    ids_g, d_g = out[0], out[1]
     return two_tier_merge(
         ids_g, d_g, live, ext_ids, q, dvec, dlab, dids, dext, dstate,
         k=k, use_ref=use_ref, fused=fused,
+        st=out[2] if stats else None,
     )
 
 
@@ -125,7 +138,7 @@ def streaming_search_core(
     jax.jit,
     static_argnames=(
         "k", "beam", "wide_beam", "max_iters", "wide_max_iters",
-        "use_ref", "fused", "expand", "wide_expand",
+        "use_ref", "fused", "expand", "wide_expand", "stats",
     ),
 )
 def planned_streaming_search_core(
@@ -156,7 +169,8 @@ def planned_streaming_search_core(
     expand: int = 1,
     wide_expand: int = 1,
     norms: jnp.ndarray | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    stats: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
     """Planner-routed variant of :func:`streaming_search_core`.
 
     The graph tier runs through the three-way planned executor (graph /
@@ -166,16 +180,18 @@ def planned_streaming_search_core(
     tombstone masking in the merge has the same depth to draw on as the
     unplanned path."""
     q = q.astype(jnp.float32)
-    ids_g, d_g = planned_exec_core(
+    out = planned_exec_core(
         vectors, nbr, labels, q, states, ep_graph, ep_wide, bf_ids, plans,
         k=beam, beam=beam, wide_beam=wide_beam,
         max_iters=max_iters, wide_max_iters=wide_max_iters,
         use_ref=use_ref, fused=fused, expand=expand,
-        wide_expand=wide_expand, norms=norms,
+        wide_expand=wide_expand, norms=norms, stats=stats,
     )
+    ids_g, d_g = out[0], out[1]
     return two_tier_merge(
         ids_g, d_g, live, ext_ids, q, dvec, dlab, dids, dext, dstate,
         k=k, use_ref=use_ref, fused=fused,
+        st=out[2] if stats else None,
     )
 
 

@@ -3,7 +3,11 @@ import time
 
 import numpy as np
 
-from repro.serve.batching import RequestBatcher, SpeculativeDispatcher
+from repro.serve.batching import (
+    RequestBatcher,
+    SpeculativeDispatcher,
+    StreamingServer,
+)
 
 
 def test_batcher_pads_with_noop_sentinels():
@@ -62,3 +66,120 @@ def test_speculative_dispatch_on_failing_shard():
     d = SpeculativeDispatcher(primary=[boom], replicas=[replica], deadline_s=1.0)
     assert d.call_all(1, 21) == [42]
     assert d.respeculated == [0]
+
+
+def test_batcher_timeout_holds_partial_batch_then_flushes():
+    """A positive timeout holds a partial batch inside the window (None),
+    flushes it once the oldest request has aged past the timeout, and
+    counts the flush in ``repro_batch_timeout_flushes_total``."""
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    b = RequestBatcher(batch_size=4, dim=2, timeout_s=0.05, registry=reg)
+    b.submit(np.ones(2), 1.0, 5.0)
+    assert b.next_batch() is None          # young partial batch: held
+    assert b.pending == 1                  # nothing was consumed
+    time.sleep(0.06)
+    batch = b.next_batch()                 # oldest request aged out: flush
+    assert batch is not None and batch[4] == 1
+    assert np.all(batch[1][1:] > batch[2][1:])   # padding is sentinel rows
+    assert reg.counter("repro_batch_timeout_flushes_total").value() == 1
+    # a FULL batch never waits on the timeout
+    for _ in range(4):
+        b.submit(np.ones(2), 1.0, 5.0)
+    assert b.next_batch()[4] == 4
+    assert reg.counter("repro_batch_timeout_flushes_total").value() == 1
+
+
+def test_batcher_force_overrides_timeout():
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    b = RequestBatcher(batch_size=8, dim=2, timeout_s=60.0, registry=reg)
+    b.submit(np.ones(2), 1.0, 5.0)
+    assert b.next_batch() is None
+    batch = b.next_batch(force=True)
+    assert batch is not None and batch[4] == 1
+    # forced flush is not a timeout flush
+    assert reg.counter("repro_batch_timeout_flushes_total").value() == 0
+    assert reg.counter("repro_batch_padding_rows_total").value() == 7
+
+
+def test_streaming_server_occupancy_extremes():
+    """Sentinel padding at occupancy 1/B and B/B through the full
+    StreamingServer path: results only for real requests, padding waste
+    and occupancy recorded per batch."""
+    from repro.data import make_dataset
+    from repro.obs import MetricsRegistry
+    from repro.stream import StreamingIndex
+
+    dim = 8
+    vecs, s, t = make_dataset(60, dim, seed=21)
+    idx = StreamingIndex(
+        dim, "overlap", node_capacity=128, delta_capacity=64,
+        edge_capacity=48, M=6, Z=24,
+    )
+    idx.insert_batch(vecs, s, t)
+    idx.compact()
+    reg = MetricsRegistry()
+    srv = StreamingServer(idx, batch_size=4, k=3, beam=16, registry=reg)
+
+    rid = srv.submit(vecs[7], float(s.min()) - 1.0, float(t.max()) + 1.0)
+    out = srv.drain()                       # occupancy 1/4: 3 sentinel rows
+    assert set(out) == {rid}
+    ids, d = out[rid]
+    assert ids.shape == (3,) and np.all(ids >= 0)
+    assert reg.counter("repro_batch_padding_rows_total").value() == 3
+    occ = reg.histogram("repro_batch_occupancy")
+    assert occ.summary()["count"] == 1 and occ.summary()["min"] == 1.0
+
+    rids = [
+        srv.submit(vecs[i], float(s.min()) - 1.0, float(t.max()) + 1.0)
+        for i in range(4)
+    ]
+    out = srv.step()                        # occupancy 4/4: flushes untimed
+    assert set(out) == set(rids)
+    assert reg.counter("repro_batch_padding_rows_total").value() == 3
+    assert occ.summary()["count"] == 2 and occ.summary()["max"] == 4.0
+    assert reg.histogram(
+        "repro_request_latency_seconds"
+    ).summary()["count"] == 5
+    assert reg.gauge("repro_epoch").value() == idx.epoch
+
+
+def test_speculative_dispatch_split_accounting():
+    """Replica wins are attributed to their cause: deadline misses and
+    failures land in separate lists and separate counter labels."""
+    from repro.obs import MetricsRegistry
+
+    def fast(x):
+        return x
+
+    def slow(x):
+        time.sleep(0.05)
+        return x
+
+    def boom(x):
+        raise RuntimeError("shard down")
+
+    def replica(x):
+        return x
+
+    reg = MetricsRegistry()
+    d = SpeculativeDispatcher(
+        primary=[fast, slow, boom],
+        replicas=[replica, replica, replica],
+        deadline_s=0.01,
+        registry=reg,
+    )
+    assert d.call_all(3, 7) == [7, 7, 7]
+    assert d.deadline_misses == [1]
+    assert d.failures == [2]
+    assert d.respeculated == [1, 2]        # combined, in dispatch order
+    c = reg.counter("repro_speculative_dispatch_total")
+    assert c.value(outcome="primary") == 1
+    assert c.value(outcome="replica_win_deadline") == 1
+    assert c.value(outcome="replica_win_failure") == 1
+    lat = reg.histogram("repro_shard_call_seconds")
+    assert lat.summary(shard="0")["count"] == 1
+    assert lat.summary(shard="1")["count"] == 1
