@@ -23,6 +23,7 @@ def validate_intervals(
     *,
     what: str = "intervals",
     clamp: bool = False,
+    require_ordered: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Boundary validation for closed intervals ``[s, t]``.
 
@@ -31,6 +32,11 @@ def validate_intervals(
     upstream would silently corrupt the index, so they are rejected here —
     or, with ``clamp=True``, degenerate spans are clamped to the
     zero-length interval at ``min(s, t)``. Returns float64 ``(s, t)``.
+
+    ``require_ordered=False`` keeps only the finiteness check: the serving
+    boundary uses it because batch padding encodes no-op rows as ``s > t``
+    (empty valid set) on purpose, while NaN/Inf would still silently poison
+    every distance they touch.
     """
     s = np.atleast_1d(np.asarray(s, dtype=np.float64))
     t = np.atleast_1d(np.asarray(t, dtype=np.float64))
@@ -38,6 +44,8 @@ def validate_intervals(
         raise ValueError(f"{what}: shape mismatch {s.shape} vs {t.shape}")
     if not (np.all(np.isfinite(s)) and np.all(np.isfinite(t))):
         raise ValueError(f"{what}: non-finite endpoints")
+    if not require_ordered:
+        return s, t
     bad = s > t
     if np.any(bad):
         if clamp:

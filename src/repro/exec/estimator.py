@@ -63,6 +63,7 @@ class SelectivityEstimator:
         self.n = int(x_rank.size)
         self.num_x = int(max(num_x, 1))
         self.num_y = int(max(num_y, 1))
+        self.buckets = int(buckets)
         self.edges_x = rank_bucket_edges(self.num_x, buckets)
         self.edges_y = rank_bucket_edges(self.num_y, buckets)
         gx = self.edges_x.shape[0] - 1

@@ -1,0 +1,259 @@
+"""Chaos scenario: one seeded end-to-end run through every fault path.
+
+Four independent phases, each against live serving objects (no mocks of
+the code under test — the injector wraps real methods from the outside):
+
+  ``compaction``      killed compaction workers: an injected exception
+                      fires inside ``build_epoch`` on the worker thread;
+                      the server must keep serving the old epoch, walk
+                      the exponential-backoff ladder, and land a clean
+                      epoch swap once the fault heals;
+  ``poison``          NaN/Inf query vectors and NaN intervals must be
+                      rejected at ``submit`` with a ``ValueError``,
+                      never reaching the device;
+  ``overload``        a submit burst beyond the admission bound must
+                      shed (bounded queue) while every admitted request
+                      is answered;
+  ``crash_recovery``  the active WAL segment is torn mid-record at a
+                      seeded offset; recovery (snapshot + surviving
+                      tail) must answer bit-identically to a fresh
+                      oracle that applies the same surviving records
+                      from scratch.
+
+Run directly (CI smokes this with fixed seeds)::
+
+    python -m repro.fault.chaos --tiny --seed 0 [--json out.json]
+
+Exit status is non-zero when any phase invariant fails, so the command
+doubles as a self-checking smoke test.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.fault.inject import (
+    FaultInjector,
+    FaultSpec,
+    poison_vector,
+    truncate_file,
+)
+from repro.serve.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    RequestShed,
+)
+from repro.serve.batching import StreamingServer
+from repro.stream.index import CompactionPolicy, StreamingIndex
+from repro.stream.wal import WriteAheadLog, recover
+
+DIM = 8
+SPAN = 100.0
+
+
+def _insert_stream(rng, idx, n):
+    ids = []
+    for _ in range(n):
+        v = rng.standard_normal(DIM).astype(np.float32)
+        s, t = np.sort(rng.uniform(0.0, SPAN, 2))
+        ids.append(idx.insert(v, float(s), float(t)))
+    return ids
+
+
+def _phase_compaction(rng, inj, kw) -> dict:
+    """Injected build failures → backoff → eventual clean swap, with the
+    old epoch serving correct results throughout."""
+    idx = StreamingIndex(
+        DIM, "containment",
+        policy=CompactionPolicy(max_delta_fraction=0.02, min_mutations=8),
+        **kw,
+    )
+    ids = _insert_stream(rng, idx, kw["delta_capacity"] // 2)
+    for e in ids[: len(ids) // 3]:
+        idx.delete(int(e))
+    server = StreamingServer(
+        idx, batch_size=4, k=5, timeout_s=0.0,
+        compaction_backoff_s=0.005, compaction_backoff_seed=inj.seed,
+    )
+    epoch_before = idx.epoch
+    q = rng.standard_normal(DIM).astype(np.float32)
+    ref_ids, ref_d = idx.search(q, 20.0, 80.0, k=5)[:2]
+    inj.add("compaction.build", FaultSpec("error", max_hits=2))
+    backoff_waits = 0
+    with inj.injected(idx, "build_epoch", "compaction.build"):
+        deadline = time.monotonic() + 30.0
+        while idx.epoch == epoch_before and time.monotonic() < deadline:
+            started = server.maybe_compact_async()
+            if not started:
+                backoff_waits += 1
+            if server._worker is not None:
+                server._worker.join()
+            # the old epoch keeps serving identical results mid-failure
+            mid_ids, mid_d = idx.search(q, 20.0, 80.0, k=5)[:2]
+            if idx.epoch == epoch_before:
+                assert np.array_equal(np.asarray(mid_ids), np.asarray(ref_ids))
+            time.sleep(0.002)
+    failures = sum(1 for p, k, _ in inj.fired if p == "compaction.build")
+    return {
+        "injected_failures": failures,
+        "backoff_waits": backoff_waits,
+        "epoch_recovered": idx.epoch > epoch_before,
+        "ok": (failures == 2 and idx.epoch > epoch_before
+               and server.last_compaction_error is None),
+    }
+
+
+def _phase_poison(rng, kw) -> dict:
+    """Non-finite inputs rejected at the serving boundary."""
+    idx = StreamingIndex(DIM, "containment", **kw)
+    _insert_stream(rng, idx, 16)
+    server = StreamingServer(idx, batch_size=4, k=5, timeout_s=0.0)
+    attempts, rejected = 0, 0
+    for kind in ("nan", "inf", "-inf"):
+        attempts += 1
+        try:
+            server.submit(poison_vector(DIM, kind=kind, seed=attempts), 10.0, 90.0)
+        except ValueError:
+            rejected += 1
+    good = rng.standard_normal(DIM).astype(np.float32)
+    for s_q, t_q in ((float("nan"), 90.0), (10.0, float("inf"))):
+        attempts += 1
+        try:
+            server.submit(good, s_q, t_q)
+        except ValueError:
+            rejected += 1
+    # a clean query still goes through after the rejections
+    rid = server.submit(good, 10.0, 90.0)
+    out = server.step(force=True)
+    return {
+        "attempts": attempts, "rejected": rejected,
+        "ok": rejected == attempts and rid in out,
+    }
+
+
+def _phase_overload(rng, kw) -> dict:
+    """Bounded queue: the burst overflow is shed, the rest answered."""
+    idx = StreamingIndex(DIM, "containment", **kw)
+    _insert_stream(rng, idx, 32)
+    adm = AdmissionController(
+        AdmissionConfig(max_queue=16, default_deadline_s=5.0), batch_size=4,
+    )
+    server = StreamingServer(idx, batch_size=4, k=5, timeout_s=0.0,
+                             admission=adm)
+    submitted, shed = 0, 0
+    max_depth = 0
+    for _ in range(48):
+        try:
+            server.submit(rng.standard_normal(DIM).astype(np.float32),
+                          10.0, 90.0)
+            submitted += 1
+        except RequestShed:
+            shed += 1
+        max_depth = max(max_depth, server.batcher.pending)
+    answered = {}
+    while server.batcher.pending:
+        answered.update(server.step(force=True))
+    return {
+        "submitted": submitted, "shed": shed, "answered": len(answered),
+        "max_queue_depth": max_depth,
+        "ok": (shed > 0 and len(answered) == submitted
+               and max_depth <= adm.config.max_queue),
+    }
+
+
+def _phase_crash(rng, seed, kw) -> dict:
+    """Torn WAL tail: snapshot + surviving-tail recovery must be
+    bit-identical to a from-scratch replay of the same surviving records."""
+    workdir = tempfile.mkdtemp(prefix="repro-chaos-wal-")
+    try:
+        wal = WriteAheadLog(workdir, segment_bytes=4096, sync="rotate")
+        idx = StreamingIndex(DIM, "containment", wal=wal, **kw)
+        _insert_stream(rng, idx, kw["delta_capacity"] + 10)
+        idx.save_snapshot(workdir, prune_wal=False)
+        tail_ids = _insert_stream(rng, idx, 12)
+        for e in tail_ids[:3]:
+            idx.delete(int(e))
+        wal.close()
+        seg = wal.active_segment_path
+        # tear inside the final record: cut 1..12 bytes off the end
+        cut = int(np.random.default_rng(seed).integers(1, 13))
+        torn_at = truncate_file(
+            seg, keep_bytes=max(0, os.path.getsize(seg) - cut)
+        )
+        rec, report = recover(workdir, dim=DIM, relation="containment", **kw)
+        oracle = StreamingIndex(DIM, "containment", **kw)
+        ro = WriteAheadLog(workdir, sync="never")
+        n_oracle = 0
+        for r in ro.replay(after_lsn=0):
+            oracle.apply_record(r)
+            n_oracle += 1
+        ro.close()
+        q = rng.standard_normal((8, DIM)).astype(np.float32)
+        sq, tq = np.full(8, 20.0), np.full(8, 80.0)
+        i1, d1 = rec.search(q, sq, tq, k=5)[:2]
+        i2, d2 = oracle.search(q, sq, tq, k=5)[:2]
+        parity = (np.array_equal(np.asarray(i1), np.asarray(i2))
+                  and np.array_equal(np.asarray(d1), np.asarray(d2)))
+        return {
+            "cut_bytes": cut, "torn_size": torn_at,
+            "snapshot_found": report.snapshot_found,
+            "truncated": report.truncated,
+            "tail_replayed": report.records_replayed,
+            "recovery_seconds": round(report.recovery_seconds, 4),
+            "parity": parity,
+            "ok": parity and report.snapshot_found and report.truncated,
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def run_chaos(seed: int = 0, *, tiny: bool = False) -> dict:
+    """Run all phases; returns a summary dict with per-phase ``ok``
+    verdicts. The fault schedule, mutation stream, and corruption offset
+    are pure functions of ``seed``; only wall-clock measurements vary."""
+    rng = np.random.default_rng(seed)
+    inj = FaultInjector(seed)
+    kw = (dict(node_capacity=256, delta_capacity=64, edge_capacity=16)
+          if tiny else
+          dict(node_capacity=1024, delta_capacity=128, edge_capacity=32))
+    summary = {"seed": seed, "tiny": tiny}
+    summary["compaction"] = _phase_compaction(rng, inj, kw)
+    summary["poison"] = _phase_poison(rng, kw)
+    summary["overload"] = _phase_overload(rng, kw)
+    summary["crash_recovery"] = _phase_crash(rng, seed, kw)
+    summary["faults_fired"] = len(inj.fired)
+    summary["ok"] = all(
+        summary[p]["ok"]
+        for p in ("compaction", "poison", "overload", "crash_recovery")
+    )
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="seeded chaos scenario over the fault-tolerant serving core",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tiny", action="store_true",
+                    help="small sizes for CI smoke")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the summary dict to this path")
+    args = ap.parse_args(argv)
+    summary = run_chaos(args.seed, tiny=args.tiny)
+    out = json.dumps(summary, indent=2, default=str)
+    print(out)
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(out + "\n")
+    return 0 if summary["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

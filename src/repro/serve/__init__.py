@@ -1,12 +1,20 @@
 """Distributed UDG serving: shard-per-device search + hierarchical merge,
-request batching, and straggler mitigation."""
+request batching, admission control, and straggler mitigation."""
+from repro.serve.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    RequestShed,
+    validate_query,
+)
 from repro.serve.distributed import (
+    PartialResult,
     ShardedIndex,
     ShardedStreamingIndex,
     build_sharded_index,
     make_planned_serving_step,
     make_serving_step,
     make_streaming_serving_step,
+    merge_partial_results,
     plan_sharded_batch,
     serve_batch,
     serve_streaming_batch,
@@ -14,7 +22,11 @@ from repro.serve.distributed import (
 from repro.serve.batching import RequestBatcher, StreamingServer
 
 __all__ = [
+    "AdmissionConfig",
+    "AdmissionController",
+    "PartialResult",
     "RequestBatcher",
+    "RequestShed",
     "ShardedIndex",
     "ShardedStreamingIndex",
     "StreamingServer",
@@ -22,7 +34,9 @@ __all__ = [
     "make_planned_serving_step",
     "make_serving_step",
     "make_streaming_serving_step",
+    "merge_partial_results",
     "plan_sharded_batch",
     "serve_batch",
     "serve_streaming_batch",
+    "validate_query",
 ]

@@ -29,12 +29,14 @@ for the catalog.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.exec import PlannerConfig, default_planner_config
 from repro.obs.metrics import (
     COUNT_BUCKETS,
     LATENCY_BUCKETS_S,
@@ -43,6 +45,7 @@ from repro.obs.metrics import (
 )
 from repro.obs.stats import record_search_stats
 from repro.obs.trace import trace_span
+from repro.serve.admission import AdmissionController, validate_query
 
 
 @dataclasses.dataclass
@@ -52,6 +55,7 @@ class Request:
     t_q: float
     req_id: int
     t_submit: float = 0.0
+    deadline: float = math.inf    # absolute (monotonic); inf = no deadline
 
 
 class RequestBatcher:
@@ -61,6 +65,15 @@ class RequestBatcher:
     asked for — the pre-timeout behavior. A positive ``timeout_s`` holds a
     partial batch until its oldest request has aged past the timeout (full
     batches always flush; ``next_batch(force=True)`` overrides the hold).
+
+    ``submit`` and ``next_batch`` may race from different threads (client
+    submitters vs the serving loop); every ``_pending`` access is guarded
+    by one mutex. ``submit`` rejects non-finite inputs up front and, with
+    an :class:`~repro.serve.admission.AdmissionController` attached, may
+    raise :class:`~repro.serve.admission.RequestShed`; requests whose
+    deadline expires while queued are dropped at batch-formation time
+    (``last_expired`` holds their ids) so dead work never reaches the
+    device.
     """
 
     def __init__(
@@ -70,49 +83,85 @@ class RequestBatcher:
         *,
         timeout_s: float = 0.0,
         registry: Optional[MetricsRegistry] = None,
+        admission: Optional[AdmissionController] = None,
+        validate: bool = True,
     ):
         self.batch_size = batch_size
         self.dim = dim
         self.timeout_s = timeout_s
+        self.admission = admission
+        self.validate = validate
         self._pending: List[Request] = []
         self._next_id = 0
+        self._lock = threading.Lock()
         self._reg = resolve(registry)
         # submit times of the requests in the most recent batch, aligned
         # with its req_ids — read by StreamingServer for request latency
         self.last_submit_times: List[float] = []
+        # req_ids dropped by the most recent next_batch (deadline expired
+        # while queued) — callers answer these with a shed error
+        self.last_expired: List[int] = []
 
-    def submit(self, qvec: np.ndarray, s_q: float, t_q: float) -> int:
-        rid = self._next_id
-        self._next_id += 1
-        self._pending.append(Request(
-            np.asarray(qvec, np.float32), s_q, t_q, rid,
-            t_submit=time.monotonic(),
-        ))
+    def submit(
+        self, qvec: np.ndarray, s_q: float, t_q: float,
+        deadline_s: Optional[float] = None,
+    ) -> int:
+        if self.validate:
+            qvec = validate_query(qvec, s_q, t_q, dim=self.dim)
+        deadline = math.inf
+        if self.admission is not None:
+            # may raise RequestShed — before the id is allocated, so a shed
+            # request leaves no trace in the queue
+            deadline = self.admission.try_admit(self.pending, deadline_s)
+        elif deadline_s is not None:
+            deadline = time.monotonic() + float(deadline_s)
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            self._pending.append(Request(
+                np.asarray(qvec, np.float32), float(s_q), float(t_q), rid,
+                t_submit=time.monotonic(), deadline=deadline,
+            ))
+            depth = len(self._pending)
         self._reg.gauge(
             "repro_batcher_queue_depth", "requests waiting to be batched"
-        ).set(len(self._pending))
+        ).set(depth)
         return rid
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        with self._lock:
+            return len(self._pending)
 
     def next_batch(
         self, force: bool = False,
     ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, List[int], int]]:
         """Returns (q [B,d], s_q [B], t_q [B], req_ids, n_real) or None
         (empty queue, or a partial batch still inside its timeout window)."""
-        if not self._pending:
-            return None
         now = time.monotonic()
-        timed_out = False
-        if len(self._pending) < self.batch_size and not force:
-            age = now - self._pending[0].t_submit
-            if self.timeout_s > 0 and age < self.timeout_s:
+        with self._lock:
+            # deadline-expired requests are shed here, not served: they
+            # would only waste device slots on answers nobody is waiting for
+            expired = [r.req_id for r in self._pending if r.deadline < now]
+            if expired:
+                self._pending = [
+                    r for r in self._pending if r.deadline >= now
+                ]
+            self.last_expired = expired
+            if not self._pending:
+                if expired and self.admission is not None:
+                    self.admission.note_expired(len(expired))
                 return None
-            timed_out = self.timeout_s > 0
-        take = self._pending[: self.batch_size]
-        self._pending = self._pending[self.batch_size:]
+            timed_out = False
+            if len(self._pending) < self.batch_size and not force:
+                age = now - self._pending[0].t_submit
+                if self.timeout_s > 0 and age < self.timeout_s:
+                    return None
+                timed_out = self.timeout_s > 0
+            take = self._pending[: self.batch_size]
+            self._pending = self._pending[self.batch_size:]
+        if expired and self.admission is not None:
+            self.admission.note_expired(len(expired))
         n = len(take)
         B = self.batch_size
         q = np.zeros((B, self.dim), np.float32)
@@ -125,7 +174,7 @@ class RequestBatcher:
         self.last_submit_times = [r.t_submit for r in take]
         self._reg.gauge(
             "repro_batcher_queue_depth", "requests waiting to be batched"
-        ).set(len(self._pending))
+        ).set(self.pending)
         self._reg.counter(
             "repro_batches_total", "batches emitted"
         ).inc()
@@ -211,6 +260,65 @@ class SpeculativeDispatcher:
     def call_all(self, nshards: int, *args) -> List[object]:
         return [self.call_shard(i, *args) for i in range(nshards)]
 
+    def call_shard_partial(self, shard: int, *args):
+        """Like ``call_shard`` but bounded: when the primary misses its
+        deadline (or raises) AND the replica also misses or raises, give up
+        on the shard and return ``None`` instead of blocking the whole
+        batch on one sick pair. The caller merges what it has
+        (``repro.serve.distributed.merge_partial_results``) and flags the
+        response degraded."""
+        disp = self._reg.counter(
+            "repro_speculative_dispatch_total",
+            "shard calls by outcome (primary / replica win after a "
+            "deadline miss or failure)",
+        )
+        lat = self._reg.histogram(
+            "repro_shard_call_seconds", "per-shard dispatch wall clock",
+            buckets=LATENCY_BUCKETS_S,
+        )
+        t0 = time.perf_counter()
+        failed = False
+        try:
+            out = self.primary[shard](*args)
+            if time.perf_counter() - t0 <= self.deadline_s:
+                disp.inc(outcome="primary")
+                lat.observe(time.perf_counter() - t0, shard=str(shard))
+                return out
+        except Exception:
+            failed = True
+        self.respeculated.append(shard)
+        if failed:
+            self.failures.append(shard)
+        else:
+            self.deadline_misses.append(shard)
+        t1 = time.perf_counter()
+        try:
+            out = self.replicas[shard](*args)
+            replica_ok = time.perf_counter() - t1 <= self.deadline_s
+        except Exception:
+            out, replica_ok = None, False
+        lat.observe(time.perf_counter() - t0, shard=str(shard))
+        if replica_ok:
+            disp.inc(outcome="replica_win_failure" if failed
+                     else "replica_win_deadline")
+            return out
+        disp.inc(outcome="both_missed")
+        self._reg.counter(
+            "repro_degraded_responses_total",
+            "responses served from a partial shard set",
+        ).inc(shard=str(shard))
+        return None
+
+    def call_all_partial(
+        self, nshards: int, *args,
+    ) -> Tuple[List[object], List[int]]:
+        """Dispatch every shard via ``call_shard_partial``; returns
+        ``(results, missing)`` where ``results[i]`` is ``None`` for each
+        shard in ``missing``."""
+        results = [self.call_shard_partial(i, *args) for i in range(nshards)]
+        missing = [i for i, r in enumerate(results) if r is None]
+        return results, missing
+
 
 class StreamingServer:
     """Batched online serving over a ``StreamingIndex`` with background
@@ -243,6 +351,10 @@ class StreamingServer:
         timeout_s: float = 0.01,
         registry: Optional[MetricsRegistry] = None,
         stats: bool = False,
+        admission: Optional[AdmissionController] = None,
+        compaction_backoff_s: float = 0.05,
+        compaction_backoff_max_s: float = 5.0,
+        compaction_backoff_seed: int = 0,
     ):
         self.index = index
         self.k = k
@@ -254,14 +366,31 @@ class StreamingServer:
         self.plan = plan
         self.stats = stats
         self._reg = resolve(registry)
+        self.admission = admission
         self.batcher = RequestBatcher(
             batch_size, index.dim, timeout_s=timeout_s, registry=registry,
+            admission=admission,
+        )
+        # overload ladder, level 1: same planned program, but
+        # wide_max_fraction=0 means no query ever routes GRAPH_WIDE — the
+        # widened-beam capacity headroom is the first thing to go
+        self._degraded_config = dataclasses.replace(
+            default_planner_config(), wide_max_fraction=0.0
         )
         self._worker: Optional[threading.Thread] = None
         self._worker_err: Optional[BaseException] = None
         self.compactions: List[object] = []
         self._epoch_seen = index.epoch
         self._epoch_swap_t = time.monotonic()
+        # compaction failure handling: keep serving the old epoch (the
+        # abort already restored it) and retry with exponential backoff +
+        # seeded jitter rather than tearing down the serving loop
+        self._backoff_base_s = compaction_backoff_s
+        self._backoff_max_s = compaction_backoff_max_s
+        self._backoff_rng = np.random.default_rng(compaction_backoff_seed)
+        self._fail_count = 0
+        self._retry_at = 0.0
+        self.last_compaction_error: Optional[BaseException] = None
 
     # --- mutations (pass-through) --------------------------------------------
 
@@ -273,8 +402,9 @@ class StreamingServer:
 
     # --- queries --------------------------------------------------------------
 
-    def submit(self, qvec: np.ndarray, s_q: float, t_q: float) -> int:
-        return self.batcher.submit(qvec, s_q, t_q)
+    def submit(self, qvec: np.ndarray, s_q: float, t_q: float,
+               deadline_s: Optional[float] = None) -> int:
+        return self.batcher.submit(qvec, s_q, t_q, deadline_s=deadline_s)
 
     def _observe_epoch(self) -> None:
         epoch = self.index.epoch
@@ -290,15 +420,37 @@ class StreamingServer:
         """Drain one batch; returns {req_id: (ext_ids [k], dists [k])}.
         ``force=True`` flushes a partial batch before its timeout."""
         with trace_span("serve_step", self._reg):
+            # degradation ladder: pick the execution strategy from queue
+            # pressure BEFORE draining (the batch about to form is part of
+            # the backlog being measured). Every rung reuses an
+            # already-compiled program — recompiling at peak load would be
+            # self-inflicted overload.
+            plan, planner_config = self.plan, None
+            if self.admission is not None and self.plan == "auto":
+                lvl = self.admission.level(self.batcher.pending)
+                if lvl == 1:
+                    planner_config = self._degraded_config
+                elif lvl == 2:
+                    plan = "graph"
+                if lvl:
+                    self._reg.counter(
+                        "repro_degraded_batches_total",
+                        "batches served under an overload degradation rung",
+                    ).inc(level=str(lvl))
             batch = self.batcher.next_batch(force=force)
             if batch is None:
                 self._observe_epoch()
                 return {}
             q, s_q, t_q, req_ids, n_real = batch
+            t_exec = time.monotonic()
             out = self.index.search(
                 q, s_q, t_q, k=self.k, beam=self.beam, use_ref=self.use_ref,
-                fused=self.fused, plan=self.plan, return_stats=self.stats,
+                fused=self.fused, plan=plan, planner_config=planner_config,
+                return_stats=self.stats,
             )
+            if self.admission is not None:
+                # feed the shedding forecast with real batch service times
+                self.admission.observe_batch(time.monotonic() - t_exec)
             if self.stats:
                 ids, d, st = out
                 record_search_stats(st, registry=self._reg, n_real=n_real)
@@ -332,10 +484,41 @@ class StreamingServer:
 
     def maybe_compact_async(self) -> bool:
         """Start a background compaction if the policy says so. Returns True
-        when a build was started (or is already running)."""
+        when a build was started (or is already running).
+
+        A failed previous attempt does NOT propagate here: the epoch swap
+        never happened, so the old epoch is still serving correct (if
+        staler) results; the failure is recorded
+        (``last_compaction_error``) and the next attempt is delayed by
+        exponential backoff with seeded jitter. ``join_compaction`` keeps
+        the raise-on-failure contract for callers that want it."""
         if self.compacting:
             return True
-        self.join_compaction()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._worker_err is not None:
+            err, self._worker_err = self._worker_err, None
+            self.last_compaction_error = err
+            self._fail_count += 1
+            delay = min(
+                self._backoff_base_s * (2.0 ** (self._fail_count - 1)),
+                self._backoff_max_s,
+            )
+            # full jitter in [delay/2, delay]: desynchronizes retry storms
+            # across servers while keeping the exponential envelope
+            delay *= 0.5 + 0.5 * float(self._backoff_rng.random())
+            self._retry_at = time.monotonic() + delay
+            self._reg.counter(
+                "repro_compaction_backoff_retries_total",
+                "compaction attempts delayed by failure backoff",
+            ).inc()
+            self._reg.gauge(
+                "repro_compaction_backoff_seconds",
+                "current compaction retry delay",
+            ).set(delay)
+        if time.monotonic() < self._retry_at:
+            return False
         if not self.index.should_compact():
             return False
         job = self.index.begin_compaction()
@@ -348,6 +531,9 @@ class StreamingServer:
             try:
                 self.index.build_epoch(job)
                 self.compactions.append(self.index.finish_compaction(job))
+                self._fail_count = 0
+                self._retry_at = 0.0
+                self.last_compaction_error = None
                 self._reg.counter(
                     "repro_compactions_total", "compaction lifecycle events"
                 ).inc(event="completed")

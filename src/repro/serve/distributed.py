@@ -19,7 +19,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-from typing import Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,7 @@ from repro.obs.stats import PER_QUERY_FIELDS as _PER_QUERY_STAT_FIELDS
 from repro.obs.stats import per_query_dict
 from repro.search.batched import _batched_search_core
 from repro.search.device_graph import export_device_graph, unpack_labels_device
+from repro.serve.admission import validate_query
 from repro.distributed.compat import shard_map as _shard_map
 
 
@@ -441,6 +442,12 @@ def serve_batch(
     here so callers see dataset ids."""
     if plan not in ("auto", "graph"):
         raise ValueError(f"plan={plan!r} not in ('auto', 'graph')")
+    # boundary hardening: a NaN/Inf anywhere in the batch silently poisons
+    # the shared distance computations, so reject before touching devices.
+    # Sentinel padding rows (s > t = empty valid set) are legitimate here.
+    q = validate_query(
+        q, s_q, t_q, what="serve_batch", require_ordered=False,
+    )
     rel = get_relation(idx.relation)
     xq, yq = rel.query_map(
         np.asarray(s_q, np.float64), np.asarray(t_q, np.float64)
@@ -489,6 +496,61 @@ def serve_batch(
     local = gids % idx.n_local
     orig = np.where(gids >= 0, local * idx.num_shards + shard, -1)
     return orig, d
+
+
+# --- partial-result merge (degraded responses under shard loss) ----------------
+
+
+@dataclasses.dataclass
+class PartialResult:
+    """Merged top-k over the shards that answered. ``degraded=True`` (one
+    or more shards contributed nothing — both the primary and its
+    speculative replica missed the deadline or raised) means the result is
+    a correct top-k over a *subset* of the database; ``missing_shards``
+    names the gaps so callers can retry or annotate."""
+
+    ids: np.ndarray        # [B, k] global ids, -1 padded
+    dists: np.ndarray      # [B, k] squared distances, +inf padded
+    degraded: bool
+    missing_shards: List[int]
+
+
+def merge_partial_results(
+    per_shard: Sequence[Optional[Tuple[np.ndarray, np.ndarray]]],
+    *,
+    k: int,
+) -> PartialResult:
+    """Host-side top-k merge across shard responses where some entries may
+    be ``None`` (shard + replica both missed — the output of
+    ``SpeculativeDispatcher.call_all_partial``).
+
+    Top-k over a union is the merge of per-shard top-k, so dropping a
+    shard degrades coverage, never correctness of the surviving
+    candidates: every returned (id, dist) pair is exact. An all-``None``
+    input yields the fully-padded empty result rather than raising —
+    total shard loss is an operational event the caller flags, not a
+    crash."""
+    missing = [i for i, r in enumerate(per_shard) if r is None]
+    avail = [r for r in per_shard if r is not None]
+    if not avail:
+        return PartialResult(
+            ids=np.full((0, k), -1, np.int32),
+            dists=np.full((0, k), np.inf, np.float32),
+            degraded=True, missing_shards=missing,
+        )
+    ids = np.concatenate([np.asarray(r[0]) for r in avail], axis=1)
+    dists = np.concatenate(
+        [np.asarray(r[1], np.float32) for r in avail], axis=1
+    )
+    # -1 padding rows carry +inf so they sort last regardless of the
+    # distance the shard reported for them
+    dists = np.where(ids >= 0, dists, np.inf)
+    order = np.argsort(dists, axis=1, kind="stable")[:, :k]
+    return PartialResult(
+        ids=np.take_along_axis(ids, order, axis=1),
+        dists=np.take_along_axis(dists, order, axis=1),
+        degraded=bool(missing), missing_shards=missing,
+    )
 
 
 # --- streaming (online mutations + per-shard epoch swap) -----------------------

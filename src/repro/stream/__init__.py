@@ -15,14 +15,26 @@ from repro.stream.search import (
     streaming_search_cache_size,
     streaming_search_core,
 )
+from repro.stream.wal import (
+    RecoveryReport,
+    ReplayReport,
+    WalRecord,
+    WriteAheadLog,
+    recover,
+)
 
 __all__ = [
     "CompactionPolicy",
     "CompactionReport",
     "DeltaBuffer",
+    "RecoveryReport",
+    "ReplayReport",
     "StreamingIndex",
+    "WalRecord",
+    "WriteAheadLog",
     "planned_streaming_search_core",
     "query_key_state",
+    "recover",
     "sort_key",
     "streaming_search_cache_size",
     "streaming_search_core",

@@ -22,6 +22,7 @@ deleted objects can never resurface.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from typing import Dict, Optional, Tuple
@@ -152,6 +153,7 @@ class StreamingIndex:
         build_kwargs: Optional[dict] = None,
         id_start: int = 0,
         id_stride: int = 1,
+        wal: Optional[object] = None,
     ):
         self.dim = dim
         self.relation = relation
@@ -199,6 +201,14 @@ class StreamingIndex:
         self._id_stride = id_stride
         self._job_active = False
         self._pending_deletes: list[int] = []
+        # durability (repro.stream.wal): when a WriteAheadLog is attached,
+        # every acknowledged mutation is appended (commit point = the WAL
+        # append) so a crash loses at most unacknowledged work. Existing
+        # log contents are assumed already reflected in this object's
+        # state — cold-start recovery goes through ``repro.stream.wal
+        # .recover``, which replays the tail *before* attaching.
+        self._wal = wal
+        self._applied_lsn = wal.last_lsn if wal is not None else 0
 
     # --- introspection --------------------------------------------------------
 
@@ -244,22 +254,52 @@ class StreamingIndex:
 
     # --- mutations ------------------------------------------------------------
 
+    def _apply_insert(self, vec: np.ndarray, s: float, t: float, ext: int) -> int:
+        """Apply one insert with a pre-assigned external id (lock held).
+        Shared by the public ``insert`` and WAL replay; may trigger a
+        synchronous flush-compaction when the delta is full — a
+        deterministic function of the mutation order, so replay reproduces
+        it bit-for-bit."""
+        if self._delta.full:
+            if self._job_active:
+                raise RuntimeError(
+                    "delta buffer full while a compaction is in flight; "
+                    "increase delta_capacity or finish the compaction"
+                )
+            self.compact()
+        slot = self._delta.append(vec, float(s), float(t), ext)
+        self._ext2loc[ext] = ("d", slot)
+        self._dev_mut = None
+        return slot
+
+    def _apply_delete(self, ext_id: int) -> bool:
+        """Apply one tombstone (lock held); shared with WAL replay."""
+        loc = self._ext2loc.pop(int(ext_id), None)
+        if loc is None:
+            return False
+        tier, i = loc
+        if tier == "g":
+            self._graph_live[i] = False
+        else:
+            self._delta.tombstone(i)
+        if self._job_active:
+            self._pending_deletes.append(int(ext_id))
+        self._dev_mut = None
+        return True
+
     def insert(self, vec: np.ndarray, s: float, t: float) -> int:
         """Insert one object; returns its external id. O(1) host work; may
-        trigger a synchronous flush-compaction when the delta is full."""
+        trigger a synchronous flush-compaction when the delta is full.
+        With a WAL attached the mutation is appended (and fsync'd, per the
+        log's sync policy) before the id is returned — the commit point."""
         with self._lock:
-            if self._delta.full:
-                if self._job_active:
-                    raise RuntimeError(
-                        "delta buffer full while a compaction is in flight; "
-                        "increase delta_capacity or finish the compaction"
-                    )
-                self.compact()
             ext = self._next_id
             self._next_id += self._id_stride
-            slot = self._delta.append(vec, float(s), float(t), ext)
-            self._ext2loc[ext] = ("d", slot)
-            self._dev_mut = None
+            self._apply_insert(vec, s, t, ext)
+            if self._wal is not None:
+                self._applied_lsn = self._wal.append_insert(
+                    ext, float(s), float(t), np.asarray(vec, np.float32)
+                )
             return ext
 
     def insert_batch(self, vecs: np.ndarray, s: np.ndarray, t: np.ndarray) -> np.ndarray:
@@ -269,20 +309,205 @@ class StreamingIndex:
         )
 
     def delete(self, ext_id: int) -> bool:
-        """Tombstone one object. Returns False for unknown/already-deleted."""
+        """Tombstone one object. Returns False for unknown/already-deleted
+        (no-op deletes are not logged)."""
         with self._lock:
-            loc = self._ext2loc.pop(int(ext_id), None)
-            if loc is None:
+            if not self._apply_delete(ext_id):
                 return False
-            tier, i = loc
-            if tier == "g":
-                self._graph_live[i] = False
-            else:
-                self._delta.tombstone(i)
-            if self._job_active:
-                self._pending_deletes.append(int(ext_id))
-            self._dev_mut = None
+            if self._wal is not None:
+                self._applied_lsn = self._wal.append_delete(int(ext_id))
             return True
+
+    # --- durability (repro.stream.wal) ----------------------------------------
+
+    @property
+    def wal_lsn(self) -> int:
+        """High-water mark: LSN of the last mutation reflected in memory."""
+        with self._lock:
+            return self._applied_lsn
+
+    def attach_wal(self, wal) -> None:
+        """Start logging future mutations to ``wal``. Existing log records
+        are assumed already applied (``recover`` replays before attaching)."""
+        with self._lock:
+            self._wal = wal
+
+    def apply_record(self, rec) -> None:
+        """Re-apply one replayed ``WalRecord`` WITHOUT re-logging it (it is
+        already durable). Advances the id allocator past replayed inserts so
+        post-recovery inserts never collide."""
+        from repro.stream.wal import KIND_DELETE, KIND_INSERT
+
+        with self._lock:
+            if rec.kind == KIND_INSERT:
+                self._apply_insert(rec.vec, rec.s, rec.t, int(rec.ext_id))
+                if int(rec.ext_id) >= self._next_id:
+                    self._next_id = int(rec.ext_id) + self._id_stride
+            elif rec.kind == KIND_DELETE:
+                self._apply_delete(int(rec.ext_id))
+            else:
+                raise ValueError(f"unknown WAL record kind {rec.kind!r}")
+            self._applied_lsn = int(rec.lsn)
+
+    def save_snapshot(self, path: str, *, prune_wal: bool = True) -> str:
+        """Crash-consistent snapshot of the full index state.
+
+        Serializes the compacted-tier device arrays (bit-exact — restore
+        never rebuilds the graph, so recovered searches run on *identical*
+        arrays), the planner's rank inputs, the delta tier, the id
+        allocator and the WAL high-water mark to ``path`` (a file, or a
+        directory that gets the canonical ``snapshot.npz`` name). The
+        write goes to a temp file first and is published with
+        ``os.replace`` — atomic on POSIX — so a crash mid-snapshot leaves
+        the previous snapshot intact. Mutations are blocked for the
+        duration (the state + high-water mark must be mutually
+        consistent). With a WAL attached, segments fully covered by the
+        snapshot are pruned afterwards (``prune_wal=False`` keeps them —
+        parity tests replay the full history). Returns the snapshot path.
+        """
+        from repro.stream.wal import SNAPSHOT_NAME, _fsync_dir
+
+        if os.path.isdir(path):
+            path = os.path.join(path, SNAPSHOT_NAME)
+        with self._lock:
+            dg = self._dg
+            pl = dg.planner
+            bk = self._build_kwargs
+            arrays = dict(
+                dg_vectors=dg.vectors, dg_nbr=dg.nbr,
+                dg_UX=dg.U_X, dg_UY=dg.U_Y,
+                dg_entry_node=dg.entry_node,
+                dg_entry_y_rank=dg.entry_y_rank,
+                dg_norms=dg.norms,
+                graph_live=self._graph_live, graph_ext=self._graph_ext,
+                graph_s=self._graph_s, graph_t=self._graph_t,
+                d_vectors=self._delta.vectors, d_s=self._delta.s,
+                d_t=self._delta.t, d_labels=self._delta.labels,
+                d_ext=self._delta.ext_ids, d_live=self._delta.live,
+                relation=np.array(self.relation),
+                meta=np.array([
+                    self.dim, self.node_capacity, self.delta_capacity,
+                    self.edge_capacity, self._epoch, self._graph_n,
+                    self._next_id, self._id_stride, self._applied_lsn,
+                    self._delta.size,
+                    int(bk.get("M", 16)), int(bk.get("Z", 64)),
+                    int(bk.get("K_p", 8)),
+                ], dtype=np.int64),
+            )
+            if dg.plabels is not None:
+                arrays["dg_plabels"] = dg.plabels
+            else:
+                arrays["dg_labels"] = dg.labels
+            if pl is not None:
+                # estimator state in original node order (its CSR keeps a
+                # permutation): rebuild-from-these-inputs is deterministic,
+                # so the restored planner routes queries identically
+                xr = np.empty(pl.n, np.int64)
+                yr = np.empty(pl.n, np.int64)
+                xr[pl._ids] = pl._xr
+                yr[pl._ids] = pl._yr
+                arrays["pl_xr"] = xr
+                arrays["pl_yr"] = yr
+                arrays["pl_meta"] = np.array(
+                    [pl.num_x, pl.num_y, pl.buckets], np.int64
+                )
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "wb") as fh:
+                np.savez(fh, **arrays)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, path)
+            _fsync_dir(os.path.dirname(os.path.abspath(path)))
+            if prune_wal and self._wal is not None:
+                self._wal.prune(self._applied_lsn)
+        return path
+
+    @classmethod
+    def restore(
+        cls,
+        path: str,
+        *,
+        policy: Optional[CompactionPolicy] = None,
+        build_kwargs: Optional[dict] = None,
+    ) -> "StreamingIndex":
+        """Reconstruct an index from a :meth:`save_snapshot` file.
+
+        The compacted tier is restored from the serialized device arrays
+        (no rebuild), the planner from its serialized rank inputs, so a
+        restored index serves bit-identical results to the instance that
+        saved the snapshot. ``policy``/``build_kwargs`` should match the
+        original construction (they are not part of the snapshot beyond
+        M/Z/K_p). Cold-start recovery — snapshot + WAL tail — goes through
+        ``repro.stream.wal.recover``.
+        """
+        from repro.search.device_graph import DeviceGraph as _DG
+
+        with np.load(path, allow_pickle=False) as z:
+            data = {name: z[name] for name in z.files}
+        (dim, ncap, dcap, ecap, epoch, graph_n, next_id, stride, lsn,
+         d_size, M, Z, K_p) = (int(x) for x in data["meta"])
+        relation = str(data["relation"].item())
+        idx = cls(
+            dim, relation, node_capacity=ncap, delta_capacity=dcap,
+            edge_capacity=ecap, M=M, Z=Z, K_p=K_p, policy=policy,
+            build_kwargs=build_kwargs, id_start=next_id, id_stride=stride,
+        )
+        packed = "dg_plabels" in data
+        if packed != idx._packed_labels:
+            raise ValueError(
+                "snapshot label layout (packed=%s) does not match the "
+                "construction-time layout for node_capacity=%d" %
+                (packed, ncap)
+            )
+        if data["dg_UX"].size == 0:
+            dg = idx._dg     # epoch-0 empty graph from the constructor
+        else:
+            planner = None
+            if "pl_xr" in data:
+                from repro.exec.estimator import SelectivityEstimator
+
+                num_x, num_y, buckets = (int(x) for x in data["pl_meta"])
+                planner = SelectivityEstimator(
+                    data["pl_xr"], data["pl_yr"], num_x, num_y,
+                    buckets=buckets,
+                )
+            dg = _DG(
+                vectors=data["dg_vectors"], nbr=data["dg_nbr"],
+                labels=data.get("dg_labels"),
+                U_X=data["dg_UX"], U_Y=data["dg_UY"],
+                entry_node=data["dg_entry_node"],
+                entry_y_rank=data["dg_entry_y_rank"],
+                relation=relation, norms=data["dg_norms"],
+                planner=planner, plabels=data.get("dg_plabels"),
+            )
+        delta = DeltaBuffer(dim, dcap, idx._rel)
+        delta.vectors[:] = data["d_vectors"]
+        delta.s[:] = data["d_s"]
+        delta.t[:] = data["d_t"]
+        delta.labels[:] = data["d_labels"]
+        delta.ext_ids[:] = data["d_ext"]
+        delta.live[:] = data["d_live"].astype(bool)
+        delta.size = d_size
+        graph_live = data["graph_live"].astype(bool)
+        graph_ext = data["graph_ext"].astype(np.int64)
+        ext2loc: Dict[int, Tuple[str, int]] = {}
+        for i in np.flatnonzero(graph_live[:graph_n]):
+            ext2loc[int(graph_ext[i])] = ("g", int(i))
+        for slot in delta.live_slots():
+            ext2loc[int(delta.ext_ids[slot])] = ("d", int(slot))
+        idx._dg = dg
+        idx._graph_n = graph_n
+        idx._graph_live = graph_live
+        idx._graph_ext = graph_ext
+        idx._graph_s = data["graph_s"].astype(np.float64)
+        idx._graph_t = data["graph_t"].astype(np.float64)
+        idx._delta = delta
+        idx._ext2loc = ext2loc
+        idx._dev_mut = None
+        idx._epoch = epoch
+        idx._next_id = next_id
+        idx._applied_lsn = lsn
+        return idx
 
     # --- compaction -----------------------------------------------------------
 

@@ -1,0 +1,240 @@
+"""Admission control: bounded queue, deadline shedding, degradation ladder.
+
+The controller is exercised with an injectable virtual clock so every
+prediction and deadline decision is deterministic — no sleeps, no timing
+margins.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    RequestShed,
+    validate_query,
+)
+from repro.serve.batching import RequestBatcher, StreamingServer
+from repro.serve.distributed import merge_partial_results
+from repro.stream import StreamingIndex
+
+
+class VirtualClock:
+    # far ahead of the real monotonic clock: deadlines stamped from this
+    # clock stay live unless a test zeroes it on purpose
+    def __init__(self):
+        self.now = 1.0e9
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, dt):
+        self.now += dt
+
+
+def _controller(clock=None, **over):
+    cfg = AdmissionConfig(**{
+        "max_queue": 8, "default_deadline_s": 1.0,
+        "min_batches_for_prediction": 1, **over,
+    })
+    kw = {} if clock is None else {"clock": clock}
+    return AdmissionController(cfg, batch_size=4, **kw), cfg
+
+
+class TestController:
+    def test_admits_under_bound(self):
+        clock = VirtualClock()
+        adm, _ = _controller(clock)
+        deadline = adm.try_admit(queue_depth=0)
+        assert deadline == clock.now + 1.0
+        assert adm.admitted == 1 and adm.shed == 0
+
+    def test_queue_full_sheds(self):
+        clock = VirtualClock()
+        adm, cfg = _controller(clock)
+        with pytest.raises(RequestShed) as ei:
+            adm.try_admit(queue_depth=cfg.max_queue)
+        assert ei.value.reason == "queue_full"
+        assert adm.shed == 1
+
+    def test_predicted_wait_sheds_doomed_requests(self):
+        clock = VirtualClock()
+        adm, _ = _controller(clock)
+        adm.observe_batch(0.5)       # 1 batch = 500ms
+        # depth 7 → ceil(8/4)=2 batches ahead → 1.0s forecast > 0.9*deadline
+        with pytest.raises(RequestShed) as ei:
+            adm.try_admit(queue_depth=7, deadline_s=1.0)
+        assert ei.value.reason == "predicted_wait"
+        # the same depth with a relaxed deadline is admitted
+        adm.try_admit(queue_depth=7, deadline_s=10.0)
+
+    def test_cold_model_never_wait_sheds(self):
+        clock = VirtualClock()
+        adm, _ = _controller(clock, min_batches_for_prediction=3)
+        adm.observe_batch(99.0)      # huge, but only 1 observation
+        assert adm.predicted_wait(7) == 0.0
+        adm.try_admit(queue_depth=7, deadline_s=0.01)   # no shed while cold
+
+    def test_ema_tracks_service_time(self):
+        clock = VirtualClock()
+        adm, _ = _controller(clock)
+        for _ in range(50):
+            adm.observe_batch(0.1)
+        w1 = adm.predicted_wait(0)
+        assert w1 == pytest.approx(0.1, rel=0.05)
+        for _ in range(50):
+            adm.observe_batch(0.2)
+        assert adm.predicted_wait(0) > w1
+
+    def test_degradation_ladder_levels(self):
+        clock = VirtualClock()
+        adm, cfg = _controller(clock)    # max_queue=8 → rungs at 4 and 6.4
+        assert adm.level(0) == 0
+        assert adm.level(3) == 0
+        assert adm.level(4) == 1
+        assert adm.level(7) == 2
+
+
+class TestBatcherIntegration:
+    def test_shed_leaves_no_queue_trace(self):
+        clock = VirtualClock()
+        adm, cfg = _controller(clock)
+        b = RequestBatcher(4, 8, admission=adm)
+        for _ in range(cfg.max_queue):
+            b.submit(np.zeros(8, np.float32), 0.0, 1.0)
+        with pytest.raises(RequestShed):
+            b.submit(np.zeros(8, np.float32), 0.0, 1.0)
+        assert b.pending == cfg.max_queue
+        # shed requests consume no request ids: the next admitted request
+        # continues the sequence
+        batch = b.next_batch(force=True)
+        assert batch is not None and batch[3] == [0, 1, 2, 3]
+
+    def test_expired_requests_dropped_at_batch_formation(self):
+        clock = VirtualClock()
+        adm, _ = _controller(clock)
+        b = RequestBatcher(4, 8, admission=adm)
+        # admission stamps absolute deadlines from the *virtual* clock;
+        # frozen at 0 with a zero budget, the deadline is already in the
+        # past of the real monotonic clock the batcher drops against
+        clock.now = 0.0
+        b.submit(np.zeros(8, np.float32), 0.0, 1.0, deadline_s=0.0)
+        b.submit(np.zeros(8, np.float32), 0.0, 1.0, deadline_s=1e9)
+        batch = b.next_batch(force=True)
+        assert b.last_expired == [0]
+        assert batch is not None and batch[3] == [1]
+        assert adm.shed == 1
+
+    def test_validation_rejects_nonfinite(self):
+        b = RequestBatcher(4, 8)
+        with pytest.raises(ValueError, match="non-finite"):
+            b.submit(np.full(8, np.nan, np.float32), 0.0, 1.0)
+        with pytest.raises(ValueError, match="non-finite"):
+            b.submit(np.zeros(8, np.float32), np.nan, 1.0)
+        with pytest.raises(ValueError, match="dim"):
+            b.submit(np.zeros(4, np.float32), 0.0, 1.0)
+        assert b.pending == 0
+
+    def test_validate_query_allows_sentinels_when_unordered(self):
+        q = validate_query(np.zeros(8, np.float32), 1.0, -1.0,
+                           require_ordered=False)
+        assert q.dtype == np.float32
+        with pytest.raises(ValueError):
+            validate_query(np.zeros(8, np.float32), 1.0, -1.0)
+
+
+def _small_index(n=60, seed=0):
+    rng = np.random.default_rng(seed)
+    idx = StreamingIndex(8, "containment", node_capacity=256,
+                         delta_capacity=64, edge_capacity=16)
+    for _ in range(n):
+        s, t = np.sort(rng.uniform(0.0, 100.0, 2))
+        idx.insert(rng.standard_normal(8).astype(np.float32),
+                   float(s), float(t))
+    return idx
+
+
+class TestServerLadder:
+    def test_step_downgrades_plan_under_pressure(self, monkeypatch):
+        adm, _ = _controller()     # real clock: deadlines must stay live
+        idx = _small_index()
+        srv = StreamingServer(idx, batch_size=4, k=5, timeout_s=0.0,
+                              admission=adm)
+        seen = []
+        real_search = idx.search
+
+        def spy(*a, **kw):
+            seen.append((kw.get("plan"), kw.get("planner_config")))
+            return real_search(*a, **kw)
+
+        monkeypatch.setattr(idx, "search", spy)
+        rng = np.random.default_rng(1)
+
+        def burst(n):
+            # generous deadline: the first step's jit compile lands in the
+            # EMA, and this test is about the ladder, not wait shedding
+            for _ in range(n):
+                srv.submit(rng.standard_normal(8).astype(np.float32),
+                           10.0, 90.0, deadline_s=120.0)
+
+        burst(2)                       # depth 2 → level 0
+        srv.step(force=True)
+        burst(5)                       # depth 5 → level 1
+        srv.step(force=True)
+        burst(7)                       # depth 7 → level 2
+        srv.step(force=True)
+        plans = [p for p, _ in seen]
+        cfgs = [c for _, c in seen]
+        assert plans == ["auto", "auto", "graph"]
+        assert cfgs[0] is None
+        assert cfgs[1] is not None and cfgs[1].wide_max_fraction == 0.0
+
+    def test_all_admitted_requests_answered(self):
+        adm, cfg = _controller(max_queue=6)
+        idx = _small_index()
+        srv = StreamingServer(idx, batch_size=4, k=5, timeout_s=0.0,
+                              admission=adm)
+        rng = np.random.default_rng(2)
+        admitted = 0
+        for _ in range(20):
+            try:
+                srv.submit(rng.standard_normal(8).astype(np.float32),
+                           10.0, 90.0)
+                admitted += 1
+            except RequestShed:
+                pass
+        out = {}
+        while srv.batcher.pending:
+            out.update(srv.step(force=True))
+        assert len(out) == admitted
+        assert adm.shed == 20 - admitted > 0
+
+
+class TestPartialMerge:
+    def _shard(self, ids, dists):
+        return (np.asarray(ids, np.int32)[None, :],
+                np.asarray(dists, np.float32)[None, :])
+
+    def test_merge_all_present_equals_global_topk(self):
+        a = self._shard([3, 9, -1], [0.1, 0.5, np.inf])
+        b = self._shard([7, 2, 4], [0.05, 0.3, 0.9])
+        out = merge_partial_results([a, b], k=3)
+        assert not out.degraded and out.missing_shards == []
+        np.testing.assert_array_equal(out.ids[0], [7, 3, 2])
+
+    def test_merge_with_missing_shard_flags_degraded(self):
+        a = self._shard([3, 9], [0.1, 0.5])
+        out = merge_partial_results([a, None], k=2)
+        assert out.degraded and out.missing_shards == [1]
+        np.testing.assert_array_equal(out.ids[0], [3, 9])
+
+    def test_merge_all_missing_is_empty_not_crash(self):
+        out = merge_partial_results([None, None], k=4)
+        assert out.degraded and out.missing_shards == [0, 1]
+        assert out.ids.shape == (0, 4)
+
+    def test_padding_sorts_last(self):
+        a = self._shard([-1, -1], [0.0, 0.0])   # bogus dists on padding
+        b = self._shard([5, -1], [0.7, 0.0])
+        out = merge_partial_results([a, b], k=2)
+        np.testing.assert_array_equal(out.ids[0], [5, -1])
+        assert out.dists[0, 1] == np.inf

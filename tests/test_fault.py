@@ -1,7 +1,10 @@
-"""Fault handling: request batching sentinels + speculative shard dispatch."""
+"""Fault handling: request batching sentinels, speculative shard dispatch,
+injected faults, and the overload/backoff paths (ISSUE 7)."""
+import threading
 import time
 
 import numpy as np
+import pytest
 
 from repro.serve.batching import (
     RequestBatcher,
@@ -183,3 +186,198 @@ def test_speculative_dispatch_split_accounting():
     lat = reg.histogram("repro_shard_call_seconds")
     assert lat.summary(shard="0")["count"] == 1
     assert lat.summary(shard="1")["count"] == 1
+
+
+# --- ISSUE 7: injected faults, races, partial results --------------------------
+
+
+def test_batcher_submit_next_batch_race_4_threads():
+    """Regression: ``_pending`` used to be mutated without a lock. Four
+    submitter threads hammer one batcher while a consumer drains; every
+    submitted request must come out exactly once, none lost, none
+    duplicated."""
+    b = RequestBatcher(batch_size=8, dim=4)
+    n_per_thread = 200
+    errors = []
+
+    def submitter(tid):
+        try:
+            for i in range(n_per_thread):
+                b.submit(np.full(4, tid, np.float32), 0.0, 1.0)
+        except Exception as e:      # pragma: no cover - the failure mode
+            errors.append(e)
+
+    threads = [threading.Thread(target=submitter, args=(t,)) for t in range(4)]
+    seen = []
+    for th in threads:
+        th.start()
+    deadline = time.monotonic() + 30.0
+    while (any(th.is_alive() for th in threads) or b.pending) \
+            and time.monotonic() < deadline:
+        batch = b.next_batch(force=True)
+        if batch is not None:
+            seen.extend(batch[3])
+    for th in threads:
+        th.join()
+    assert not errors
+    assert len(seen) == 4 * n_per_thread, "requests lost or duplicated"
+    assert len(set(seen)) == len(seen), "request ids duplicated"
+
+
+def test_fault_injector_is_deterministic():
+    from repro.fault import FaultInjector, FaultSpec
+
+    def schedule(seed):
+        inj = FaultInjector(seed, sleep=lambda s: None)
+        inj.add("p", FaultSpec("error", probability=0.3))
+        fires = []
+        for i in range(50):
+            try:
+                inj.on("p")
+            except Exception:
+                fires.append(i)
+        return fires
+
+    assert schedule(7) == schedule(7)
+    assert schedule(7) != schedule(8)
+
+
+def test_fault_injector_max_hits_heals():
+    from repro.fault import FaultInjector, FaultSpec
+    from repro.fault.inject import InjectedFault
+
+    inj = FaultInjector(0)
+    inj.add("x", FaultSpec("error", max_hits=2))
+    hits = 0
+    for _ in range(5):
+        try:
+            inj.on("x")
+        except InjectedFault:
+            hits += 1
+    assert hits == 2        # transient fault: heals after max_hits
+
+
+def test_compaction_failure_backs_off_and_recovers():
+    """An injected build failure must not surface through the serving
+    loop: the old epoch keeps serving, retries back off, and a later
+    clean attempt swaps the epoch."""
+    from repro.fault import FaultInjector, FaultSpec
+    from repro.stream import CompactionPolicy, StreamingIndex
+
+    rng = np.random.default_rng(0)
+    idx = StreamingIndex(
+        8, "containment", node_capacity=256, delta_capacity=64,
+        edge_capacity=16,
+        policy=CompactionPolicy(max_delta_fraction=0.02, min_mutations=8),
+    )
+    for _ in range(32):
+        s, t = np.sort(rng.uniform(0, 100, 2))
+        idx.insert(rng.standard_normal(8).astype(np.float32),
+                   float(s), float(t))
+    srv = StreamingServer(idx, batch_size=4, k=5, timeout_s=0.0,
+                          compaction_backoff_s=0.005)
+    epoch0 = idx.epoch
+    inj = FaultInjector(0)
+    inj.add("build", FaultSpec("error", max_hits=1))
+    with inj.injected(idx, "build_epoch", "build"):
+        assert srv.maybe_compact_async()
+        srv._worker.join()
+        # reap the failure: no raise, backoff scheduled instead
+        started = srv.maybe_compact_async()
+        assert not started
+        assert srv.last_compaction_error is not None
+        assert idx.epoch == epoch0, "failed build must not swap the epoch"
+        # after the backoff window a clean attempt lands
+        deadline = time.monotonic() + 15.0
+        while idx.epoch == epoch0 and time.monotonic() < deadline:
+            if srv.maybe_compact_async() and srv._worker is not None:
+                srv._worker.join()
+                srv.maybe_compact_async()
+            time.sleep(0.002)
+    assert idx.epoch > epoch0
+    assert srv._fail_count == 0
+
+
+def test_join_compaction_still_raises_for_explicit_callers():
+    """The backoff path must not swallow failures from callers that ask
+    for them: ``join_compaction`` keeps the raise contract."""
+    from repro.fault import FaultInjector, FaultSpec
+    from repro.fault.inject import InjectedFault
+    from repro.stream import CompactionPolicy, StreamingIndex
+
+    rng = np.random.default_rng(1)
+    idx = StreamingIndex(
+        8, "containment", node_capacity=256, delta_capacity=64,
+        edge_capacity=16,
+        policy=CompactionPolicy(max_delta_fraction=0.02, min_mutations=8),
+    )
+    for _ in range(32):
+        s, t = np.sort(rng.uniform(0, 100, 2))
+        idx.insert(rng.standard_normal(8).astype(np.float32),
+                   float(s), float(t))
+    srv = StreamingServer(idx, batch_size=4, k=5)
+    inj = FaultInjector(0)
+    inj.add("build", FaultSpec("error"))
+    with inj.injected(idx, "build_epoch", "build"):
+        assert srv.maybe_compact_async()
+        with pytest.raises(InjectedFault):
+            srv.join_compaction()
+
+
+def test_call_all_partial_returns_none_for_dead_pair():
+    def ok(x):
+        return ("ok", x)
+
+    def boom(x):
+        raise RuntimeError("primary down")
+
+    def boom2(x):
+        raise RuntimeError("replica down")
+
+    d = SpeculativeDispatcher(
+        primary=[ok, boom], replicas=[ok, boom2], deadline_s=0.5,
+    )
+    results, missing = d.call_all_partial(2, 42)
+    assert results[0] == ("ok", 42)
+    assert results[1] is None and missing == [1]
+
+
+def test_call_shard_partial_replica_saves_shard():
+    def boom(x):
+        raise RuntimeError("primary down")
+
+    def ok(x):
+        return x * 2
+
+    d = SpeculativeDispatcher(primary=[boom], replicas=[ok], deadline_s=0.5)
+    results, missing = d.call_all_partial(1, 21)
+    assert results == [42] and missing == []
+
+
+def test_poison_vector_rejected_before_device():
+    from repro.fault import poison_vector
+    from repro.stream import StreamingIndex
+
+    idx = StreamingIndex(8, "containment", node_capacity=256,
+                         delta_capacity=64, edge_capacity=16)
+    rng = np.random.default_rng(2)
+    for _ in range(8):
+        s, t = np.sort(rng.uniform(0, 100, 2))
+        idx.insert(rng.standard_normal(8).astype(np.float32),
+                   float(s), float(t))
+    srv = StreamingServer(idx, batch_size=4, k=5)
+    for kind in ("nan", "inf", "-inf"):
+        with pytest.raises(ValueError, match="non-finite"):
+            srv.submit(poison_vector(8, kind=kind), 10.0, 90.0)
+    with pytest.raises(ValueError, match="non-finite"):
+        srv.submit(rng.standard_normal(8).astype(np.float32),
+                   float("nan"), 90.0)
+    assert srv.batcher.pending == 0
+
+
+def test_chaos_scenario_tiny_smoke():
+    """The CI chaos entry point end-to-end with a fixed seed."""
+    from repro.fault.chaos import run_chaos
+
+    summary = run_chaos(0, tiny=True)
+    assert summary["ok"], summary
