@@ -21,6 +21,7 @@ from benchmarks import (
     bench_kernels,
     bench_batched,
     bench_planner,
+    bench_scale,
     bench_serving,
     bench_streaming,
     bench_telemetry,
@@ -38,6 +39,7 @@ ALL = [
     ("kernels", bench_kernels.main),
     ("batched_search", bench_batched.main),
     ("query_planner", bench_planner.main),
+    ("scale_segmented", bench_scale.main),
     ("distributed_serving", bench_serving.main),
     ("streaming_index", bench_streaming.main),
     ("telemetry", bench_telemetry.main),

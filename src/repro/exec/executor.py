@@ -154,6 +154,7 @@ def execute_batch(
     return_plans: bool = False,
     packed: bool | None = None,
     stats: bool = False,
+    row_mask: Optional[np.ndarray] = None,
 ):
     """Planned end-to-end batched query over a ``DeviceGraph``.
 
@@ -163,6 +164,13 @@ def execute_batch(
     ``packed`` selects the label layout for the graph strategies exactly
     as in ``batched_udg_search`` (``None`` = packed when exported,
     ``False`` = int32 parity oracle, ``True`` = require packed).
+    ``row_mask`` (``[B]`` bool, optional) drops rows from the batch by the
+    same padding dispatch the planner uses: a ``False`` row is treated as
+    invalid (entry points masked to -1, brute lists empty), so it returns
+    ``ids=-1 / d=+inf`` at zero traversal cost and — critically — without
+    changing any traced shape. The segmented router
+    (``repro.scale``) relies on this to run mixed per-segment batch
+    subsets through the one compiled program.
     Returns ``(ids [B, k], dists [B, k])`` plus the ``PlanBatch`` when
     ``return_plans`` is set (``None`` for the non-auto modes) plus a
     host-side :class:`repro.obs.SearchStats` when ``stats`` is set (always
@@ -173,6 +181,14 @@ def execute_batch(
     config = config or default_planner_config()
     states, ep, invalid = prepare_states_extended(dg, s_q, t_q)
     B = states.shape[0]
+    if row_mask is not None:
+        row_mask = np.asarray(row_mask, dtype=bool).reshape(-1)
+        if row_mask.shape[0] != B:
+            raise ValueError(
+                f"row_mask has {row_mask.shape[0]} rows, batch has {B}"
+            )
+        invalid = invalid | ~row_mask
+        ep = np.where(row_mask, ep, -1).astype(np.int32)
     if plan == "auto":
         pb = plan_queries(dg.planner, states, invalid, config=config)
         plans, bf_ids = pb.plans, pb.bf_ids

@@ -147,6 +147,34 @@ def beam_merge(
         beam_d, beam_ids, beam_exp, cand_d, cand_ids, n=n)
 
 
+def topk_merge(
+    acc_d: jnp.ndarray,      # [B, L] f32 ascending (+inf padding)
+    acc_ids: jnp.ndarray,    # [B, L] int32 (-1 padding)
+    cand_d: jnp.ndarray,     # [B, C] f32 (+inf = dead candidate)
+    cand_ids: jnp.ndarray,   # [B, C] int32
+    *,
+    n: int,
+    use_ref: bool = False,
+):
+    """Fold a candidate block into a running ascending top-L — ``(ids, d)``.
+
+    The segment-merge form of :func:`beam_merge`: the accumulator plays the
+    beam (no expanded flags to carry) and each per-segment result block
+    plays the candidates. Ids must be globally unique across live entries
+    (disjoint segment memberships guarantee this); ``n`` is any bound
+    strictly above every live id (the dedup sentinel). Ties at exactly
+    equal distance resolve toward the accumulator, then candidate arrival
+    order — so folding segments in a fixed order is deterministic, and
+    both backends (jnp / Pallas bitonic) are pinned bitwise by the same
+    oracle as ``beam_merge``.
+    """
+    exp = jnp.zeros(acc_ids.shape, dtype=bool)
+    new_ids, new_d, _, _ = beam_merge(
+        acc_d, acc_ids, exp, cand_d, cand_ids, n=n, use_ref=use_ref
+    )
+    return new_ids, new_d
+
+
 def int8_l2dist(
     q: jnp.ndarray, c_q: jnp.ndarray, c_scale: jnp.ndarray, *, use_ref: bool = False
 ) -> jnp.ndarray:
@@ -164,4 +192,5 @@ __all__ = [
     "int8_l2dist",
     "l2dist",
     "quantize_int8",
+    "topk_merge",
 ]

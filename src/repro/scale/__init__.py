@@ -1,0 +1,25 @@
+"""Scale-out tier: dominance-space segmentation of the UDG.
+
+``partition`` — the G×G-aligned segment grid + recall-safe coarse router;
+``segmented`` — the batch-built segmented index (concurrent wave builds,
+int8-resident segments, routed execution, exact f32 rerank tail);
+``stream`` — the segment-local streaming tier (per-segment epoch swaps).
+"""
+from repro.scale.partition import SegmentGrid, canonicalize_batch
+from repro.scale.segmented import (
+    Segment,
+    SegmentedIndex,
+    build_segmented_index,
+    merge_fold_cache_size,
+)
+from repro.scale.stream import SegmentedStreamingIndex
+
+__all__ = [
+    "Segment",
+    "SegmentGrid",
+    "SegmentedIndex",
+    "SegmentedStreamingIndex",
+    "build_segmented_index",
+    "canonicalize_batch",
+    "merge_fold_cache_size",
+]

@@ -1,0 +1,384 @@
+"""Segmented UDG: per-segment subgraphs + coarse routing + int8/rerank.
+
+The scale-out form of the index (ROADMAP item 1). The normalized dominance
+space is partitioned by :class:`repro.scale.partition.SegmentGrid`; every
+non-empty cell becomes a *segment* holding an independent UDG subgraph
+over its members, exported in the PR5 packed-label device layout. Queries
+flow through three stages:
+
+1. **route** — the grid's corner test selects the cells a query's
+   dominance rectangle can intersect at all (recall-safe: over-selects,
+   never drops — see ``partition.py``), then each routed segment's
+   ``SelectivityEstimator`` refines with its histogram upper bound
+   (``hi == 0`` ⇒ the segment provably holds no valid object ⇒ skip,
+   equally recall-safe).
+2. **execute** — every routed segment runs the whole batch through the
+   existing one-compiled-program padding dispatch
+   (``exec.executor.execute_batch``) with ``row_mask`` masking the rows
+   not routed to it. All segments share one ``node_capacity`` /
+   ``edge_capacity`` / label layout, and masking is by padding (entry
+   points → -1), so ANY mix of segment counts reuses the same two
+   compiled programs (executor + merge fold) — pinned by the jit-cache
+   test in ``tests/test_segmented.py``.
+3. **merge + rerank** — per-segment top-``fetch`` results (local ids
+   mapped to global) fold into one running top-``fetch`` via
+   ``ops.topk_merge`` (fixed shapes ⇒ one compile), then a float32
+   **exact rerank tail** re-scores the fused candidates against the
+   original vectors and emits the final top-k with the ground-truth tie
+   rule (distance, then smaller id). int8 residency (``quantize_int8``)
+   is the *default* at scale — the rerank tail is what lets the resident
+   layout drop to 1 byte/dim without giving up exact final ordering.
+
+Segment membership is disjoint, so global ids never collide in the merge;
+distances from int8 segments are dequantized-row distances (the documented
+``export_device_graph`` contract) and are replaced by exact f32 distances
+whenever ``rerank=True`` (the default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.build import BuildReport
+from repro.core.build_batched import _bucket, build_graphs_concurrent
+from repro.core.predicates import (
+    DominanceSpace,
+    RelationMapping,
+    get_relation,
+)
+from repro.exec.plan import PlannerConfig
+from repro.scale.partition import SegmentGrid, canonicalize_batch
+from repro.search.device_graph import RANK_LIMIT, export_device_graph
+
+
+@dataclasses.dataclass
+class Segment:
+    """One dominance-space cell's resident subgraph."""
+
+    cell: int            # flattened grid cell id
+    ids: np.ndarray      # [m] int64 global object ids (ascending)
+    dg: object           # DeviceGraph over the segment's members
+    report: BuildReport  # its wave-build report
+
+
+@functools.partial(jax.jit, static_argnames=("n", "use_ref"))
+def _fold_topk(acc_d, acc_ids, cand_d, cand_ids, *, n: int, use_ref: bool):
+    from repro.kernels import ops
+
+    return ops.topk_merge(acc_d, acc_ids, cand_d, cand_ids,
+                          n=n, use_ref=use_ref)
+
+
+def merge_fold_cache_size() -> int:
+    """Compiled variants of the segment merge fold (no-recompile
+    assertions across mixed routed-segment counts)."""
+    return _fold_topk._cache_size()
+
+
+def _execute_segment(seg: "Segment", q, s_q, t_q, **kw):
+    from repro.exec.executor import execute_batch
+
+    out = execute_batch(seg.dg, q, s_q, t_q, **kw)
+    return np.asarray(out[0]), np.asarray(out[1])
+
+
+class SegmentedIndex:
+    """Scale-out UDG: routed per-segment subgraphs behind one search API.
+
+    Build with :func:`build_segmented_index`; query with :meth:`search`.
+    All device work reuses the monolithic layers — the segments are plain
+    ``DeviceGraph`` exports, execution is ``execute_batch``, merging is
+    the ``beam_merge`` primitive — so every kernel-level contract (packed
+    labels, padding dispatch, tie rules) is inherited, not re-implemented.
+    """
+
+    def __init__(
+        self,
+        relation: RelationMapping,
+        grid: SegmentGrid,
+        space: DominanceSpace,
+        segments: Sequence[Segment],
+        vectors: np.ndarray,
+        *,
+        node_capacity: int,
+        edge_capacity: int,
+        quantized: bool,
+        packed: bool,
+    ):
+        self.relation = relation
+        self.grid = grid
+        self.space = space
+        self.segments = list(segments)
+        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        self.n = int(self.vectors.shape[0])
+        self.node_capacity = int(node_capacity)
+        self.edge_capacity = int(edge_capacity)
+        self.quantized = bool(quantized)
+        self.packed = bool(packed)
+        # dedup sentinel for the merge fold: any bound strictly above every
+        # global id, bucketed to a power of two so differently sized
+        # indices still share the compiled fold
+        self._n_sentinel = 1 << max(int(self.n).bit_length(), 1)
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    def segment_sizes(self) -> np.ndarray:
+        return np.array([seg.ids.shape[0] for seg in self.segments],
+                        dtype=np.int64)
+
+    # --- routing --------------------------------------------------------------
+
+    def _query_states(
+        self, s_q: np.ndarray, t_q: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Transformed + globally canonicalized batch — (x_q, y_q, a, c,
+        valid)."""
+        s_q = np.asarray(s_q, dtype=np.float64).reshape(-1)
+        t_q = np.asarray(t_q, dtype=np.float64).reshape(-1)
+        x_q, y_q = self.relation.query_map(s_q, t_q)
+        a, c, valid = canonicalize_batch(self.space, x_q, y_q)
+        return np.asarray(x_q, np.float64), np.asarray(y_q, np.float64), \
+            a, c, valid
+
+    def coarse_route(
+        self, s_q: np.ndarray, t_q: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Grid-level routing — ``(route [B, num_segments] bool, valid)``.
+
+        Column order matches ``self.segments``. Over-selection is expected;
+        dropping a valid object is a bug (the property test's invariant).
+        """
+        _, _, a, c, valid = self._query_states(s_q, t_q)
+        cells = self.grid.route_ranks(a, c, valid)
+        route = np.zeros((cells.shape[0], self.num_segments), dtype=bool)
+        for si, seg in enumerate(self.segments):
+            route[:, si] = cells[:, seg.cell]
+        return route, valid
+
+    def _refine_route(
+        self, route: np.ndarray, x_q: np.ndarray, y_q: np.ndarray
+    ) -> np.ndarray:
+        """AND each routed column with the segment planner's ``hi > 0``.
+
+        ``hi`` is a TRUE upper bound on the segment-local valid count
+        (estimator contract), so ``hi == 0`` segments are provably empty
+        for the query and skipping them cannot lose recall.
+        """
+        out = route.copy()
+        for si, seg in enumerate(self.segments):
+            col = out[:, si]
+            if not col.any():
+                continue
+            dg = seg.dg
+            a_loc = np.searchsorted(dg.U_X, x_q, side="left").astype(np.int64)
+            c_loc = (np.searchsorted(dg.U_Y, y_q, side="right") - 1).astype(
+                np.int64
+            )
+            _, hi = dg.planner.count_bounds(a_loc, c_loc)
+            out[:, si] = col & (hi > 0)
+        return out
+
+    # --- search ---------------------------------------------------------------
+
+    def search(
+        self,
+        q: np.ndarray,
+        s_q: np.ndarray,
+        t_q: np.ndarray,
+        *,
+        k: int = 10,
+        beam: int = 64,
+        fetch_k: Optional[int] = None,
+        rerank: bool = True,
+        plan: str = "auto",
+        config: Optional[PlannerConfig] = None,
+        use_ref: bool = False,
+        fused: bool = True,
+        expand: int = 1,
+        max_iters: Optional[int] = None,
+        return_route: bool = False,
+    ):
+        """Routed top-k over all segments — ``(ids [B, k] int64, d [B, k])``.
+
+        ``fetch_k`` is the per-segment candidate width fed to the merge
+        fold (default ``2k`` when the int8 rerank tail is on, else ``k``);
+        ``rerank=True`` replaces resident-layout distances with exact f32
+        distances over the fused candidates and re-sorts by (distance,
+        id) — the ground-truth tie rule. ``return_route`` appends the
+        refined ``[B, num_segments]`` routing mask (observability +
+        tests). All remaining knobs pass through to ``execute_batch``
+        unchanged.
+        """
+        q = np.asarray(q, dtype=np.float32)
+        B = q.shape[0]
+        fetch = int(fetch_k) if fetch_k is not None else (
+            2 * k if (rerank and self.quantized) else k
+        )
+        fetch = max(fetch, k)
+        beam_eff = max(beam, fetch)
+        x_q, y_q, a, c, valid = self._query_states(s_q, t_q)
+        cells = self.grid.route_ranks(a, c, valid)
+        route = np.zeros((B, self.num_segments), dtype=bool)
+        for si, seg in enumerate(self.segments):
+            route[:, si] = cells[:, seg.cell]
+        route = self._refine_route(route, x_q, y_q)
+
+        import jax.numpy as jnp
+
+        acc_ids = jnp.full((B, fetch), -1, dtype=jnp.int32)
+        acc_d = jnp.full((B, fetch), jnp.inf, dtype=jnp.float32)
+        for si, seg in enumerate(self.segments):
+            mask = route[:, si]
+            if not mask.any():
+                continue  # host-side skip: no shapes change downstream
+            loc_ids, loc_d = _execute_segment(
+                seg, q, s_q, t_q, k=fetch, beam=beam_eff,
+                max_iters=max_iters, use_ref=use_ref, fused=fused,
+                expand=expand, plan=plan, config=config, row_mask=mask,
+                packed=self.packed,
+            )
+            m = seg.ids.shape[0]
+            glob = np.where(
+                loc_ids >= 0,
+                seg.ids[np.clip(loc_ids, 0, m - 1)],
+                -1,
+            ).astype(np.int32)
+            acc_ids, acc_d = _fold_topk(
+                acc_d, acc_ids, jnp.asarray(loc_d), jnp.asarray(glob),
+                n=self._n_sentinel, use_ref=use_ref,
+            )
+        ids = np.asarray(acc_ids)
+        d = np.asarray(acc_d)
+        if rerank:
+            ids, d = self._rerank_exact(q, ids, d, k)
+        else:
+            ids, d = ids[:, :k], d[:, :k]
+        out = (ids.astype(np.int64), d.astype(np.float32))
+        if return_route:
+            out += (route,)
+        return out
+
+    def _rerank_exact(
+        self, q: np.ndarray, ids: np.ndarray, d: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Float32 exact-rerank tail over the fused candidates.
+
+        Gathers the original f32 rows for every fused candidate, re-scores
+        ``‖v − q‖²`` exactly, and selects top-k by ``(distance, id)`` —
+        the same ``np.lexsort`` tie rule as ``data.workloads.ground_truth``
+        — so int8 residency never changes the *final* ordering, only the
+        candidate generation.
+        """
+        safe = np.clip(ids, 0, self.n - 1)
+        vv = self.vectors[safe]                       # [B, L, D] f32
+        diff = vv - q[:, None, :]
+        d_ex = np.einsum("bld,bld->bl", diff, diff).astype(np.float32)
+        d_ex = np.where(ids >= 0, d_ex, np.float32(np.inf))
+        order = np.lexsort((ids, d_ex))               # per-row (d, id) sort
+        sel = order[:, :k]
+        out_ids = np.take_along_axis(ids, sel, axis=1)
+        out_d = np.take_along_axis(d_ex, sel, axis=1)
+        return out_ids, out_d
+
+    # --- accounting -----------------------------------------------------------
+
+    def nbytes_by_component(self) -> dict:
+        """Aggregated at-rest bytes: per-segment ``DeviceGraph`` components
+        summed key-wise, plus the router's own state under ``"router"``.
+        Component sum equals :meth:`nbytes` exactly (pinned in tests —
+        the n=1M byte-budget gate depends on these numbers)."""
+        agg: dict = {}
+        for seg in self.segments:
+            for key, v in seg.dg.nbytes_by_component().items():
+                agg[key] = agg.get(key, 0) + v
+        agg["router"] = self.grid.nbytes()
+        return agg
+
+    def nbytes(self) -> int:
+        return sum(self.nbytes_by_component().values())
+
+
+def build_segmented_index(
+    vectors: np.ndarray,
+    s: np.ndarray,
+    t: np.ndarray,
+    relation: str,
+    *,
+    cells_per_axis: int = 4,
+    M: int = 16,
+    Z: int = 64,
+    K_p: int = 8,
+    leap: str = "maxleap",
+    patch: str = "full",
+    wave: int = 256,
+    lane: int = 8,
+    quantize_int8: bool = True,
+    planner_buckets: int = 64,
+    use_ref: bool = True,
+) -> SegmentedIndex:
+    """Partition, build all segment subgraphs concurrently, export.
+
+    Every non-empty grid cell becomes a segment; the per-segment UDGs are
+    built through ONE interleaved wave pipeline
+    (``build_graphs_concurrent`` — each graph keeps its own incremental
+    ``BroadExport`` adjacency, device searches overlap host sweeps) and
+    exported with UNIFORM ``node_capacity``/``edge_capacity``/label
+    layout, which is what lets every segment execute through the same
+    compiled program at query time. ``quantize_int8`` defaults ON here —
+    the scale tier's resident layout — because the rerank tail restores
+    exact final ordering (see :class:`SegmentedIndex`).
+    """
+    vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+    rel = get_relation(relation)
+    X, Y = rel.transform_data(s, t)
+    space = DominanceSpace.build(X, Y)
+    xr, yr = space.ranks()
+    grid = SegmentGrid.from_space(space, cells_per_axis)
+    cell = grid.assign_ranks(xr, yr)
+
+    members: List[np.ndarray] = []
+    cells_used: List[int] = []
+    for cc in np.unique(cell):
+        ids = np.flatnonzero(cell == cc).astype(np.int64)  # ascending
+        members.append(ids)
+        cells_used.append(int(cc))
+
+    node_cap = _bucket(max(int(ids.shape[0]) for ids in members))
+    s = np.asarray(s, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    datasets = [(vectors[ids], s[ids], t[ids]) for ids in members]
+    built = build_graphs_concurrent(
+        datasets, relation, M=M, Z=Z, K_p=K_p,
+        leap=leap, patch=patch, wave=wave, pad_nodes=node_cap,
+        use_ref=use_ref,
+    )
+
+    # uniform lane-aligned edge capacity = the max natural degree anywhere
+    E = lane
+    fits = True
+    for g, _ in built:
+        deg = max((g.adj[u].size for u in range(g.n)), default=1)
+        E = max(E, ((deg + lane - 1) // lane) * lane)
+        fits &= (g.space.U_X.shape[0] <= RANK_LIMIT
+                 and g.space.U_Y.shape[0] <= RANK_LIMIT)
+
+    segments = []
+    for cc, ids, (g, rep) in zip(cells_used, members, built):
+        dg = export_device_graph(
+            g, lane=lane, node_capacity=node_cap, edge_capacity=E,
+            quantize_int8=quantize_int8, planner_buckets=planner_buckets,
+            packed_labels=True if fits else False,
+        )
+        segments.append(Segment(cell=cc, ids=ids, dg=dg, report=rep))
+
+    return SegmentedIndex(
+        rel, grid, space, segments, vectors,
+        node_capacity=node_cap, edge_capacity=E,
+        quantized=quantize_int8, packed=fits,
+    )

@@ -1,0 +1,203 @@
+"""Segmented streaming tier: segment-local compaction over routed inserts.
+
+One ``StreamingIndex`` per dominance-space grid cell, fronted by the same
+value-space router the batch index uses. The properties this buys at
+scale:
+
+* **segment-local epoch swap** — a hot cell compacts (rebuild + atomic
+  swap) without touching any other segment's epoch; the rest of the
+  index keeps serving its current graphs untouched. ``epochs()`` and the
+  ``swap_counts`` observer (wired through ``StreamingIndex``'s
+  ``on_epoch_swap`` hook) make the locality observable and testable.
+* **globally unique external ids** — sub-index ``c`` of ``C`` draws ids
+  from the arithmetic progression ``c, c + C, c + 2C, …`` (the existing
+  ``id_start``/``id_stride`` namespace), so ``delete``/lookup route by
+  ``ext_id mod C`` with no id map.
+* **uniform capacities** — every sub-index shares one
+  ``node_capacity``/``edge_capacity``/``delta_capacity``, so all
+  segments serve through the same compiled streaming program (the
+  static-shape discipline of ``stream.index`` carries over unchanged).
+
+Inserts route by *transformed value* (``SegmentGrid.assign_values`` —
+correct for values off the construction-time canonical grid, which is the
+normal streaming case); queries route by the value-space corner test
+(``route_values``), which over-selects but never drops a valid object —
+the identical invariant the batch router is property-tested under.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.predicates import get_relation
+from repro.scale.partition import SegmentGrid
+from repro.stream.index import CompactionPolicy, CompactionReport, StreamingIndex
+
+
+class SegmentedStreamingIndex:
+    """Router + per-cell ``StreamingIndex`` fleet; one public mutation/query
+    surface with segment-local compaction."""
+
+    def __init__(
+        self,
+        dim: int,
+        relation: str,
+        grid: SegmentGrid,
+        *,
+        node_capacity: int = 4096,
+        delta_capacity: int = 512,
+        edge_capacity: int = 128,
+        M: int = 16,
+        Z: int = 64,
+        K_p: int = 8,
+        policy: Optional[CompactionPolicy] = None,
+        build_kwargs: Optional[dict] = None,
+    ):
+        self.dim = dim
+        self.relation = relation
+        self._rel = get_relation(relation)
+        self.grid = grid
+        C = grid.num_cells
+        self.swap_counts = [0] * C  # per-segment epoch swaps observed
+        self.subs: List[StreamingIndex] = [
+            StreamingIndex(
+                dim, relation,
+                node_capacity=node_capacity,
+                delta_capacity=delta_capacity,
+                edge_capacity=edge_capacity,
+                M=M, Z=Z, K_p=K_p,
+                policy=policy,
+                build_kwargs=build_kwargs,
+                id_start=ci, id_stride=C,
+                on_epoch_swap=self._swap_observer(ci),
+            )
+            for ci in range(C)
+        ]
+
+    def _swap_observer(self, cell: int):
+        def note(report: CompactionReport) -> None:
+            self.swap_counts[cell] += 1
+        return note
+
+    # --- introspection --------------------------------------------------------
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.subs)
+
+    @property
+    def live_count(self) -> int:
+        return sum(sub.live_count for sub in self.subs)
+
+    def epochs(self) -> List[int]:
+        """Per-segment epoch numbers — segment-local by construction."""
+        return [sub.epoch for sub in self.subs]
+
+    def live_ids(self) -> np.ndarray:
+        parts = [sub.live_ids() for sub in self.subs]
+        return np.sort(np.concatenate(parts)) if parts else np.empty(0, np.int64)
+
+    # --- mutations ------------------------------------------------------------
+
+    def _cell_of(self, s: float, t: float) -> int:
+        X, Y = self._rel.transform_data(
+            np.asarray([s], np.float64), np.asarray([t], np.float64)
+        )
+        return int(self.grid.assign_values(X, Y)[0])
+
+    def insert(self, vec: np.ndarray, s: float, t: float) -> int:
+        """Route by transformed value, insert into the owning segment;
+        returns the globally unique external id."""
+        return self.subs[self._cell_of(s, t)].insert(vec, s, t)
+
+    def insert_batch(
+        self, vecs: np.ndarray, s: np.ndarray, t: np.ndarray
+    ) -> np.ndarray:
+        return np.array(
+            [self.insert(vecs[i], float(s[i]), float(t[i]))
+             for i in range(len(vecs))],
+            dtype=np.int64,
+        )
+
+    def delete(self, ext_id: int) -> bool:
+        """Id-namespace routing: segment = ``ext_id mod num_segments``."""
+        return self.subs[int(ext_id) % self.num_segments].delete(ext_id)
+
+    def maybe_compact(self) -> Dict[int, CompactionReport]:
+        """Poll every segment's compaction policy; segments compact (and
+        epoch-swap) INDEPENDENTLY — the returned dict maps the cell ids
+        that actually swapped to their reports."""
+        out: Dict[int, CompactionReport] = {}
+        for ci, sub in enumerate(self.subs):
+            rep = sub.maybe_compact()
+            if rep is not None:
+                out[ci] = rep
+        return out
+
+    # --- queries --------------------------------------------------------------
+
+    def search(
+        self,
+        q: np.ndarray,
+        s_q,
+        t_q,
+        *,
+        k: int = 10,
+        beam: int = 64,
+        max_iters: Optional[int] = None,
+        use_ref: bool = True,
+        fused: bool = True,
+        plan: str = "auto",
+    ):
+        """Routed two-tier search — ``(ext ids [B, k] int64, d [B, k])``.
+
+        Value-space routing skips whole segments no query row can
+        intersect (recall-safe corner test); routed segments run their
+        normal streaming search and the per-segment top-k merge by the
+        ground-truth ``(distance, id)`` tie rule. External ids are
+        globally unique across segments, so the merge needs no dedup.
+        """
+        q = np.asarray(q, dtype=np.float32)
+        single = q.ndim == 1
+        if single:
+            q = q[None]
+            s_q = np.asarray([s_q], dtype=np.float64)
+            t_q = np.asarray([t_q], dtype=np.float64)
+        else:
+            s_q = np.asarray(s_q, dtype=np.float64)
+            t_q = np.asarray(t_q, dtype=np.float64)
+        B = q.shape[0]
+        x_q, y_q = self._rel.query_map(s_q, t_q)
+        route = self.grid.route_values(x_q, y_q)  # [B, C] bool
+
+        all_ids = np.full((B, 0), -1, dtype=np.int64)
+        all_d = np.full((B, 0), np.inf, dtype=np.float32)
+        for ci, sub in enumerate(self.subs):
+            if not route[:, ci].any():
+                continue
+            ids_c, d_c = sub.search(
+                q, s_q, t_q, k=k, beam=beam, max_iters=max_iters,
+                use_ref=use_ref, fused=fused, plan=plan,
+            )
+            ids_c = np.asarray(ids_c, dtype=np.int64)
+            d_c = np.where(ids_c >= 0, np.asarray(d_c, np.float32), np.inf)
+            all_ids = np.concatenate([all_ids, ids_c], axis=1)
+            all_d = np.concatenate([all_d, d_c], axis=1)
+
+        if all_ids.shape[1] == 0:
+            ids = np.full((B, k), -1, dtype=np.int64)
+            d = np.full((B, k), np.inf, dtype=np.float32)
+        else:
+            pad = max(k - all_ids.shape[1], 0)
+            if pad:
+                all_ids = np.pad(all_ids, ((0, 0), (0, pad)),
+                                 constant_values=-1)
+                all_d = np.pad(all_d, ((0, 0), (0, pad)),
+                               constant_values=np.inf)
+            order = np.lexsort((all_ids, all_d))[:, :k]
+            ids = np.take_along_axis(all_ids, order, axis=1)
+            d = np.take_along_axis(all_d, order, axis=1).astype(np.float32)
+        if single:
+            return ids[0], d[0]
+        return ids, d

@@ -169,6 +169,78 @@ def build_sharded_index(
     )
 
 
+def segments_to_sharded_index(segidx) -> tuple:
+    """Stack a ``repro.scale.SegmentedIndex`` into the shard_map serving
+    layout — segments sharded across hosts. Returns ``(sharded, id_map)``.
+
+    The segments already share one ``node_capacity``/``edge_capacity``/
+    label layout (the segmented build's uniform-export contract), so the
+    stack needs no per-shard re-padding beyond the canonical grids. Two
+    deltas vs ``build_sharded_index``'s round-robin partition:
+
+    * membership is dominance-driven, not ``id % S``, so the serving
+      step's synthetic global ids (``shard · n_l + local``) do not equal
+      object ids — ``id_map [S, n_l] int64`` (-1 on padding rows) plus
+      :func:`remap_shard_ids` recover them;
+    * int8-resident segments stack their *float32* rows (``ShardedIndex``
+      carries no scales), with norms recomputed from those rows so the
+      fused scorer sees matching vector/norm pairs — the rerank-exact
+      contract of the segmented tier, applied fleet-wide.
+    """
+    dgs = [seg.dg for seg in segidx.segments]
+    S = len(dgs)
+    n_l = int(segidx.node_capacity)
+    E = max(dg.max_degree for dg in dgs)
+    ux = max(dg.U_X.shape[0] for dg in dgs)
+    uy = max(dg.U_Y.shape[0] for dg in dgs)
+
+    def padE(a, e, fill):
+        out = np.full(a.shape[:1] + (e,) + a.shape[2:], fill, dtype=a.dtype)
+        out[:, : a.shape[1]] = a
+        return out
+
+    vec = np.stack([np.asarray(dg.vectors, np.float32) for dg in dgs])
+    nbr = np.stack([padE(dg.nbr, E, -1) for dg in dgs])
+    if all(dg.plabels is not None for dg in dgs):
+        lab = np.stack([padE(dg.plabels, E, 0) for dg in dgs])
+    else:
+        lab = np.stack([padE(dg.labels_i32(), E, 0) for dg in dgs])
+    nrm = np.einsum("sij,sij->si", vec, vec).astype(np.float32)
+    UX = np.full((S, ux), np.inf, np.float32)
+    UY = np.full((S, uy), np.inf, np.float32)
+    ent = np.full((S, ux), -1, np.int32)
+    enty = np.full((S, ux), np.iinfo(np.int32).max, np.int32)
+    num_y = np.zeros(S, np.int32)
+    id_map = np.full((S, n_l), -1, np.int64)
+    for i, dg in enumerate(dgs):
+        kx = dg.U_X.shape[0]
+        UX[i, :kx] = dg.U_X.astype(np.float32)
+        UY[i, : dg.U_Y.shape[0]] = dg.U_Y.astype(np.float32)
+        num_y[i] = dg.U_Y.shape[0]
+        ent[i, :kx] = dg.entry_node
+        enty[i, :kx] = dg.entry_y_rank
+        seg = segidx.segments[i]
+        id_map[i, : seg.ids.shape[0]] = seg.ids
+    sharded = ShardedIndex(
+        vectors=vec, nbr=nbr, labels=lab, norms=nrm, U_X=UX, U_Y=UY,
+        num_y=num_y, entry_node=ent, entry_y_rank=enty,
+        relation=segidx.relation.name, n_local=n_l,
+        planners=[dg.planner for dg in dgs],
+    )
+    return sharded, id_map
+
+
+def remap_shard_ids(id_map: np.ndarray, gids: np.ndarray) -> np.ndarray:
+    """Translate serving-step synthetic ids (``shard · n_l + local``) back
+    to true object ids via the ``id_map`` from
+    :func:`segments_to_sharded_index`; -1 passes through."""
+    S, n_l = id_map.shape
+    g = np.asarray(gids, dtype=np.int64)
+    safe = np.clip(g, 0, S * n_l - 1)
+    out = id_map.reshape(-1)[safe]
+    return np.where(g >= 0, out, np.int64(-1))
+
+
 def _canonicalize_local(UX, UY, num_y, ent, enty, xq, yq):
     """Device-side Lemma 1 snap onto shard-local canonical grids.
 
@@ -431,6 +503,7 @@ def serve_batch(
     merge: str = "all_gather",
     plan: str = "auto",
     planner_config: PlannerConfig | None = None,
+    id_map: np.ndarray | None = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Host entry point: run one distributed batch end-to-end.
 
@@ -439,7 +512,10 @@ def serve_batch(
     is the pre-planner single-strategy path (parity oracle; also the
     fallback for indexes without planner state). Returned ids are
     ROUND-ROBIN global: original_id = local_id*shards+shard is inverted
-    here so callers see dataset ids."""
+    here so callers see dataset ids — unless ``id_map`` is given (a
+    segment-stacked index from :func:`segments_to_sharded_index`, whose
+    membership is dominance-driven, not round-robin), in which case ids
+    are translated through :func:`remap_shard_ids` instead."""
     if plan not in ("auto", "graph"):
         raise ValueError(f"plan={plan!r} not in ('auto', 'graph')")
     # boundary hardening: a NaN/Inf anywhere in the batch silently poisons
@@ -492,6 +568,8 @@ def serve_batch(
         )
     gids = np.asarray(gids)
     d = np.asarray(d)
+    if id_map is not None:
+        return remap_shard_ids(id_map, gids), d
     shard = gids // idx.n_local
     local = gids % idx.n_local
     orig = np.where(gids >= 0, local * idx.num_shards + shard, -1)

@@ -154,6 +154,7 @@ class StreamingIndex:
         id_start: int = 0,
         id_stride: int = 1,
         wal: Optional[object] = None,
+        on_epoch_swap: Optional[object] = None,
     ):
         self.dim = dim
         self.relation = relation
@@ -209,6 +210,11 @@ class StreamingIndex:
         # .recover``, which replays the tail *before* attaching.
         self._wal = wal
         self._applied_lsn = wal.last_lsn if wal is not None else 0
+        # epoch-swap observer: called with the CompactionReport after each
+        # swap, OUTSIDE the index lock (a slow observer must not block
+        # mutations). The segmented tier (repro.scale.stream) uses this to
+        # track segment-local swaps without polling every sub-index.
+        self._on_epoch_swap = on_epoch_swap
 
     # --- introspection --------------------------------------------------------
 
@@ -627,7 +633,7 @@ class StreamingIndex:
             self._epoch += 1
             self._job_active = False
             self._pending_deletes = []
-            return CompactionReport(
+            report = CompactionReport(
                 epoch=self._epoch,
                 n_live=len(ext2loc),
                 build_seconds=job.build_seconds,
@@ -635,6 +641,9 @@ class StreamingIndex:
                 delta_drained=job.delta_consumed,
                 tombstones_cleared=job.tombstones,
             )
+        if self._on_epoch_swap is not None:
+            self._on_epoch_swap(report)
+        return report
 
     def abort_compaction(self) -> None:
         """Abandon an in-flight compaction job (e.g. after a build failure);

@@ -1,8 +1,14 @@
-"""Gradient compression numerics (single-device parts)."""
+"""Compression numerics: gradient quantization (single-device parts) and the
+index-side int8 resident layout (``export_device_graph(quantize_int8=True)``),
+whose scale/norm math is pinned BITWISE — the segmented tier's rerank tail
+and byte budgets both assume exactly this layout."""
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.build_batched import build_udg_batched
+from repro.data import make_dataset
 from repro.distributed.compression import dequantize_leaf, quantize_leaf
+from repro.search import export_device_graph
 
 
 def test_quantize_roundtrip_error_bound():
@@ -20,3 +26,46 @@ def test_quantize_zero_grad():
     g = jnp.zeros((16,))
     q, scale = quantize_leaf(g)
     assert float(jnp.max(jnp.abs(dequantize_leaf(q, scale)))) == 0.0
+
+
+# --- index int8 resident layout (scale tier) -----------------------------------
+
+
+def test_export_int8_scale_norm_roundtrip_bitwise():
+    """Pin the EXACT export math: amax -> scales -> vec_q -> dequantized
+    norms, including the 1e-12 zero-row guard and padding rows. Bitwise —
+    any drift silently breaks stored norms and the byte budget."""
+    vecs, s, t = make_dataset(200, 12, seed=3)
+    vecs[7] = 0.0  # exercise the amax floor on an all-zero row
+    g, _ = build_udg_batched(vecs, s, t, "overlap", M=8, Z=32, K_p=4)
+    n_pad = 256  # force padding rows into the quantized table
+    dg = export_device_graph(g, node_capacity=n_pad, quantize_int8=True)
+
+    v32 = np.zeros((n_pad, vecs.shape[1]), dtype=np.float32)
+    v32[: g.n] = g.vectors
+    amax = np.maximum(np.max(np.abs(v32), axis=1), 1e-12)
+    scales = (amax / 127.0).astype(np.float32)
+    vec_q = np.clip(np.round(v32 / scales[:, None]), -127, 127).astype(np.int8)
+    deq = vec_q.astype(np.float32) * scales[:, None]
+    norms = np.sum(deq * deq, axis=1, dtype=np.float32)
+
+    np.testing.assert_array_equal(np.asarray(dg.scales), scales)
+    np.testing.assert_array_equal(np.asarray(dg.vec_q), vec_q)
+    np.testing.assert_array_equal(np.asarray(dg.norms), norms)
+    # layout facts the byte-budget accounting relies on
+    assert dg.vec_q.dtype == np.int8 and dg.vec_q.nbytes * 4 == dg.vectors.nbytes
+    assert dg.scales.dtype == np.float32
+    # zero row quantizes to zeros with the floored scale, not NaN/garbage
+    assert np.all(np.asarray(dg.vec_q)[7] == 0)
+    assert np.asarray(dg.norms)[7] == 0.0
+
+
+def test_export_int8_dequant_error_bound():
+    """Half-bucket error bound per coordinate (mirror of the gradient
+    quantizer's guarantee, on the index side)."""
+    vecs, s, t = make_dataset(128, 10, seed=5)
+    g, _ = build_udg_batched(vecs, s, t, "containment", M=8, Z=32, K_p=4)
+    dg = export_device_graph(g, quantize_int8=True)
+    deq = np.asarray(dg.vec_q, np.float32) * np.asarray(dg.scales)[:, None]
+    err = np.abs(deq[: g.n] - g.vectors)
+    assert np.all(err <= np.asarray(dg.scales)[: g.n, None] * 0.5 + 1e-7)
