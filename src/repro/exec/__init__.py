@@ -24,6 +24,8 @@ from repro.exec.executor import (
     mask_entry_points,
     planned_exec_cache_size,
     planned_exec_core,
+    worklist_exec_cache_size,
+    worklist_exec_core,
 )
 
 __all__ = [
@@ -42,4 +44,6 @@ __all__ = [
     "plan_queries",
     "planned_exec_cache_size",
     "planned_exec_core",
+    "worklist_exec_cache_size",
+    "worklist_exec_core",
 ]

@@ -41,7 +41,7 @@ from repro.exec.plan import (
     default_planner_config,
     plan_queries,
 )
-from repro.obs.stats import combine_stats, stats_to_host
+from repro.obs.stats import SearchStats, combine_stats, stats_to_host
 from repro.search.batched import _batched_search_core, prepare_states_extended
 
 PLANS = ("auto", "graph", "wide", "brute")
@@ -86,6 +86,34 @@ def planned_exec_core(
     zero iterations → exact-zero counters), so the two stats pytrees merge
     by addition; ``BRUTE_VALID`` rows do no traversal and stay all-zero
     (their termination cause reads as ``no_entry``)."""
+    return _planned_exec_impl(
+        vectors, nbr, labels, q, states, ep_graph, ep_wide, bf_ids, plans,
+        k=k, beam=beam, wide_beam=wide_beam, max_iters=max_iters,
+        wide_max_iters=wide_max_iters, use_ref=use_ref, fused=fused,
+        expand=expand, wide_expand=wide_expand, scales=scales, norms=norms,
+        stats=stats,
+    )
+
+
+def _planned_exec_impl(
+    vectors, nbr, labels, q, states, ep_graph, ep_wide, bf_ids, plans,
+    *,
+    k: int,
+    beam: int,
+    wide_beam: int,
+    max_iters: int,
+    wide_max_iters: int,
+    use_ref: bool,
+    fused: bool,
+    expand: int,
+    wide_expand: int,
+    scales,
+    norms,
+    stats: bool,
+) -> Tuple[jnp.ndarray, ...]:
+    """Trace-time body of :func:`planned_exec_core`, shared with the
+    segmented tier's :func:`worklist_exec_core` (which wraps it in its own
+    jit after the in-graph segment-offset arithmetic)."""
     out_g = _batched_search_core(
         vectors, nbr, labels, q, states, ep_graph,
         k=k, beam=beam, max_iters=max_iters, use_ref=use_ref,
@@ -123,6 +151,128 @@ def planned_exec_cache_size() -> int:
     """Number of compiled variants of the planned executor (no-recompile
     assertions across mixed-plan batches and epoch swaps)."""
     return planned_exec_core._cache_size()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "beam", "wide_beam", "max_iters", "wide_max_iters",
+        "use_ref", "fused", "expand", "wide_expand", "stats",
+        "node_cap", "n_sentinel",
+    ),
+)
+def worklist_exec_core(
+    vectors: jnp.ndarray,    # [S*node_cap, D] flat stacked storage
+    nbr: jnp.ndarray,        # [S*node_cap, E] int32 — PRE-OFFSET by segment
+                             # base (repro.search.device_graph.SegmentStack),
+                             # so traversal is segment-closed with no per-row
+                             # arithmetic in the search loop
+    labels: jnp.ndarray,     # [S*node_cap, E, 2|4] segment-local rectangles
+    gid_table: jnp.ndarray,  # [S*node_cap] int32 flat node -> global object
+                             # id (-1 on capacity padding rows)
+    q: jnp.ndarray,          # [B, D] the ORIGINAL query batch
+    qid: jnp.ndarray,        # [W] int32 query row per work item (== B marks
+                             # bucket padding, dropped by the scatter)
+    seg_ids: jnp.ndarray,    # [W] int32 segment per work item (0 on padding)
+    states: jnp.ndarray,     # [W, 2] int32 segment-local canonical states
+    ep_graph: jnp.ndarray,   # [W] int32 segment-LOCAL entry ids (-1 masked)
+    ep_wide: jnp.ndarray,    # [W] int32
+    bf_ids: jnp.ndarray,     # [W, V] int32 segment-local brute ids (-1 pad)
+    plans: jnp.ndarray,      # [W] int32 QueryPlan values
+    *,
+    k: int,
+    beam: int,
+    wide_beam: int,
+    max_iters: int,
+    wide_max_iters: int,
+    use_ref: bool,
+    fused: bool = True,
+    expand: int = 1,
+    wide_expand: int = 1,
+    scales: jnp.ndarray | None = None,
+    norms: jnp.ndarray | None = None,
+    stats: bool = False,
+    node_cap: int,
+    n_sentinel: int,
+) -> Tuple[jnp.ndarray, ...]:
+    """One compiled dispatch for a whole routed-segment worklist.
+
+    Each work item is one (query, segment) pair: its entry points and
+    brute-path ids are offset to the flat row space in-graph, the
+    three-strategy planned executor runs over the ``[W]`` worklist, results
+    map through the device-resident global-id table, scatter back to
+    ``[B, S, k]`` (bucket-padding items carry ``qid == B`` and drop out of
+    bounds), and ONE grouped ``topk_merge`` over the segment-ordered
+    ``[B, S·k]`` block folds them — bit-identical to the per-segment
+    sequential fold because ids are globally unique across segments and the
+    merge's ties resolve by arrival order.
+
+    ``stats=True`` appends a ``[B]``-per-query :class:`SearchStats`:
+    worklist-row counters scatter-add back to their query row (a query's
+    per-segment trajectories are independent, so addition over its routed
+    segments equals the legacy loop's ``combine_stats``)."""
+    from repro.kernels import ops
+
+    B = q.shape[0]
+    n_flat = vectors.shape[0]
+    S = n_flat // node_cap
+    base = seg_ids.astype(jnp.int32) * jnp.int32(node_cap)
+    ep_g = jnp.where(ep_graph >= 0, ep_graph + base, -1).astype(jnp.int32)
+    ep_w = jnp.where(ep_wide >= 0, ep_wide + base, -1).astype(jnp.int32)
+    bf = jnp.where(bf_ids >= 0, bf_ids + base[:, None], -1).astype(jnp.int32)
+    q_w = q[jnp.clip(qid, 0, B - 1)]
+    out = _planned_exec_impl(
+        vectors, nbr, labels, q_w, states, ep_g, ep_w, bf, plans,
+        k=k, beam=beam, wide_beam=wide_beam, max_iters=max_iters,
+        wide_max_iters=wide_max_iters, use_ref=use_ref, fused=fused,
+        expand=expand, wide_expand=wide_expand, scales=scales, norms=norms,
+        stats=stats,
+    )
+    ids_f, d_w = out[0], out[1]
+    glob = jnp.where(
+        ids_f >= 0,
+        gid_table[jnp.clip(ids_f, 0, n_flat - 1)],
+        jnp.int32(-1),
+    ).astype(jnp.int32)
+    sc_d = jnp.full((B, S, k), jnp.inf, dtype=jnp.float32)
+    sc_i = jnp.full((B, S, k), -1, dtype=jnp.int32)
+    sc_d = sc_d.at[qid, seg_ids].set(d_w, mode="drop")
+    sc_i = sc_i.at[qid, seg_ids].set(glob, mode="drop")
+    acc_d = jnp.full((B, k), jnp.inf, dtype=jnp.float32)
+    acc_i = jnp.full((B, k), -1, dtype=jnp.int32)
+    ids, d = ops.topk_merge(
+        acc_d, acc_i, sc_d.reshape(B, S * k), sc_i.reshape(B, S * k),
+        n=n_sentinel, use_ref=use_ref,
+    )
+    if stats:
+        st = out[2]
+
+        def scat(v):
+            return jnp.zeros(B, dtype=jnp.int32).at[qid].add(
+                v.astype(jnp.int32), mode="drop"
+            )
+
+        st_b = SearchStats(
+            iters=scat(st.iters),
+            expanded=scat(st.expanded),
+            cand_total=scat(st.cand_total),
+            cand_valid=scat(st.cand_valid),
+            kept=scat(st.kept),
+            visited=scat(st.visited),
+            beam_occupancy=scat(st.beam_occupancy),
+            hit_max_iters=scat(st.hit_max_iters) > 0,
+            delta_valid=scat(st.delta_valid),
+            hop_valid=st.hop_valid,
+            hop_total=st.hop_total,
+        )
+        return ids, d, st_b
+    return ids, d
+
+
+def worklist_exec_cache_size() -> int:
+    """Compiled variants of the worklist scheduler program (the segmented
+    tier's no-recompile gate across routed-mix / bucket changes)."""
+    return worklist_exec_core._cache_size()
 
 
 def mask_entry_points(

@@ -10,7 +10,9 @@ from repro.scale.segmented import (
     Segment,
     SegmentedIndex,
     build_segmented_index,
+    dispatch_count,
     merge_fold_cache_size,
+    worklist_capacity,
 )
 from repro.scale.stream import SegmentedStreamingIndex
 
@@ -21,5 +23,7 @@ __all__ = [
     "SegmentedStreamingIndex",
     "build_segmented_index",
     "canonicalize_batch",
+    "dispatch_count",
     "merge_fold_cache_size",
+    "worklist_capacity",
 ]

@@ -52,7 +52,11 @@ from repro.core.predicates import (
 )
 from repro.exec.plan import PlannerConfig
 from repro.scale.partition import SegmentGrid, canonicalize_batch
-from repro.search.device_graph import RANK_LIMIT, export_device_graph
+from repro.search.device_graph import (
+    RANK_LIMIT,
+    SegmentStack,
+    export_device_graph,
+)
 
 
 @dataclasses.dataclass
@@ -79,11 +83,49 @@ def merge_fold_cache_size() -> int:
     return _fold_topk._cache_size()
 
 
+# process-wide device-dispatch tally: the scheduler issues ONE compiled
+# dispatch per batch regardless of routed-segment mix, the legacy loop one
+# per routed segment — the delta is what bench_scale's
+# `dispatches_per_batch == 1` gate and the empty-worklist test observe.
+_dispatch_count = 0
+
+
+def dispatch_count() -> int:
+    """Compiled device dispatches issued by ``SegmentedIndex.search`` so
+    far in this process (scheduler path: 1/batch; legacy loop: 1/routed
+    segment)."""
+    return _dispatch_count
+
+
+def _note_dispatch() -> None:
+    global _dispatch_count
+    _dispatch_count += 1
+
+
+def worklist_capacity(w: int) -> int:
+    """Quarter-octave bucketed worklist capacity (floor 8): the padded
+    ``[W]`` length the scheduler dispatches with. Buckets are the
+    powers of two plus the 1.25/1.5/1.75 intermediate steps (8, 10, 12,
+    14, 16, 20, 24, 28, 32, 40, ...), so routed-mix changes land in a
+    small closed set of compiled variants (at most 4 per octave) while
+    padding waste — dead rows the lockstep search still computes every
+    iteration — stays under 25% instead of the up-to-2x of pure
+    power-of-two buckets."""
+    w = max(int(w), 8)
+    p = 1 << (w - 1).bit_length()   # next power of two >= w
+    h = p >> 1
+    for cap in (h + h // 4, h + h // 2, h + 3 * h // 4):
+        if w <= cap:
+            return cap
+    return p
+
+
 def _execute_segment(seg: "Segment", q, s_q, t_q, **kw):
     from repro.exec.executor import execute_batch
 
+    _note_dispatch()
     out = execute_batch(seg.dg, q, s_q, t_q, **kw)
-    return np.asarray(out[0]), np.asarray(out[1])
+    return (np.asarray(out[0]), np.asarray(out[1])) + tuple(out[2:])
 
 
 class SegmentedIndex:
@@ -123,10 +165,25 @@ class SegmentedIndex:
         # global id, bucketed to a power of two so differently sized
         # indices still share the compiled fold
         self._n_sentinel = 1 << max(int(self.n).bit_length(), 1)
+        self._stack: Optional[SegmentStack] = None
 
     @property
     def num_segments(self) -> int:
         return len(self.segments)
+
+    def device_stack(self) -> SegmentStack:
+        """Memoized flat device stack over all segments (pre-offset
+        adjacency + global-id table) — built on the first scheduler
+        dispatch, reused for every batch after."""
+        if self._stack is None:
+            st = SegmentStack(
+                node_capacity=self.node_capacity,
+                edge_capacity=self.edge_capacity,
+            )
+            for seg in self.segments:
+                st.append_segment(seg.dg, seg.ids)
+            self._stack = st
+        return self._stack
 
     def segment_sizes(self) -> np.ndarray:
         return np.array([seg.ids.shape[0] for seg in self.segments],
@@ -203,6 +260,8 @@ class SegmentedIndex:
         expand: int = 1,
         max_iters: Optional[int] = None,
         return_route: bool = False,
+        scheduler: bool = True,
+        stats: bool = False,
     ):
         """Routed top-k over all segments — ``(ids [B, k] int64, d [B, k])``.
 
@@ -212,16 +271,34 @@ class SegmentedIndex:
         distances over the fused candidates and re-sorts by (distance,
         id) — the ground-truth tie rule. ``return_route`` appends the
         refined ``[B, num_segments]`` routing mask (observability +
-        tests). All remaining knobs pass through to ``execute_batch``
-        unchanged.
+        tests); ``stats=True`` appends a per-query
+        :class:`repro.obs.SearchStats` (always the LAST element).
+
+        ``scheduler=True`` (default) flattens the routed mask into one
+        (query, segment) worklist and executes the whole mix as ONE
+        compiled dispatch over the flat :class:`SegmentStack`
+        (``exec.executor.worklist_exec_core``), padded to a quarter-octave
+        bucket so mixes never recompile; ``scheduler=False`` keeps the
+        per-segment host loop — the bit-exact parity oracle (results AND
+        stats identical, pinned in tests).
         """
+        from repro.exec.plan import default_planner_config
+        from repro.obs.stats import (
+            combine_stats,
+            init_search_stats,
+            stats_to_host,
+        )
+
         q = np.asarray(q, dtype=np.float32)
+        s_q = np.asarray(s_q, dtype=np.float64).reshape(-1)
+        t_q = np.asarray(t_q, dtype=np.float64).reshape(-1)
         B = q.shape[0]
         fetch = int(fetch_k) if fetch_k is not None else (
             2 * k if (rerank and self.quantized) else k
         )
         fetch = max(fetch, k)
         beam_eff = max(beam, fetch)
+        cfg = config or default_planner_config()
         x_q, y_q, a, c, valid = self._query_states(s_q, t_q)
         cells = self.grid.route_ranks(a, c, valid)
         route = np.zeros((B, self.num_segments), dtype=bool)
@@ -229,32 +306,52 @@ class SegmentedIndex:
             route[:, si] = cells[:, seg.cell]
         route = self._refine_route(route, x_q, y_q)
 
-        import jax.numpy as jnp
-
-        acc_ids = jnp.full((B, fetch), -1, dtype=jnp.int32)
-        acc_d = jnp.full((B, fetch), jnp.inf, dtype=jnp.float32)
-        for si, seg in enumerate(self.segments):
-            mask = route[:, si]
-            if not mask.any():
-                continue  # host-side skip: no shapes change downstream
-            loc_ids, loc_d = _execute_segment(
-                seg, q, s_q, t_q, k=fetch, beam=beam_eff,
+        if scheduler:
+            ids, d, st = self._search_worklist(
+                q, s_q, t_q, route, fetch=fetch, beam_eff=beam_eff,
                 max_iters=max_iters, use_ref=use_ref, fused=fused,
-                expand=expand, plan=plan, config=config, row_mask=mask,
-                packed=self.packed,
+                expand=expand, plan=plan, config=cfg, stats=stats,
             )
-            m = seg.ids.shape[0]
-            glob = np.where(
-                loc_ids >= 0,
-                seg.ids[np.clip(loc_ids, 0, m - 1)],
-                -1,
-            ).astype(np.int32)
-            acc_ids, acc_d = _fold_topk(
-                acc_d, acc_ids, jnp.asarray(loc_d), jnp.asarray(glob),
-                n=self._n_sentinel, use_ref=use_ref,
-            )
-        ids = np.asarray(acc_ids)
-        d = np.asarray(acc_d)
+        else:
+            import jax.numpy as jnp
+
+            acc_ids = jnp.full((B, fetch), -1, dtype=jnp.int32)
+            acc_d = jnp.full((B, fetch), jnp.inf, dtype=jnp.float32)
+            acc_st = None
+            for si, seg in enumerate(self.segments):
+                mask = route[:, si]
+                if not mask.any():
+                    continue  # host-side skip: no shapes change downstream
+                out_s = _execute_segment(
+                    seg, q, s_q, t_q, k=fetch, beam=beam_eff,
+                    max_iters=max_iters, use_ref=use_ref, fused=fused,
+                    expand=expand, plan=plan, config=cfg, row_mask=mask,
+                    packed=self.packed, stats=stats,
+                )
+                loc_ids, loc_d = out_s[0], out_s[1]
+                if stats:
+                    seg_st = out_s[-1]
+                    acc_st = seg_st if acc_st is None else combine_stats(
+                        acc_st, seg_st
+                    )
+                m = seg.ids.shape[0]
+                glob = np.where(
+                    loc_ids >= 0,
+                    seg.ids[np.clip(loc_ids, 0, m - 1)],
+                    -1,
+                ).astype(np.int32)
+                acc_ids, acc_d = _fold_topk(
+                    acc_d, acc_ids, jnp.asarray(loc_d), jnp.asarray(glob),
+                    n=self._n_sentinel, use_ref=use_ref,
+                )
+            ids = np.asarray(acc_ids)
+            d = np.asarray(acc_d)
+            st = None
+            if stats:
+                if acc_st is None:
+                    mi = max_iters if max_iters is not None else 2 * beam_eff
+                    acc_st = init_search_stats(B, mi * cfg.wide_beam_scale)
+                st = stats_to_host(acc_st)
         if rerank:
             ids, d = self._rerank_exact(q, ids, d, k)
         else:
@@ -262,7 +359,149 @@ class SegmentedIndex:
         out = (ids.astype(np.int64), d.astype(np.float32))
         if return_route:
             out += (route,)
+        if stats:
+            out += (st,)
         return out
+
+    def _search_worklist(
+        self, q, s_q, t_q, route, *, fetch, beam_eff, max_iters,
+        use_ref, fused, expand, plan, config, stats,
+    ):
+        """One-dispatch scheduler body — ``(ids [B, fetch] int32 global,
+        d [B, fetch] f32, stats | None)``.
+
+        Host side: per routed segment, slice the routed query rows,
+        canonicalize on the segment grid and plan them (row-independent,
+        so plans match the legacy full-batch ``row_mask`` call exactly),
+        then concatenate segment-major into one ``[W]`` worklist padded to
+        ``worklist_capacity(W)``. Device side: one
+        ``worklist_exec_core`` call over the memoized flat stack.
+        """
+        from repro.exec.executor import (
+            PLANS,
+            mask_entry_points,
+            worklist_exec_core,
+        )
+        from repro.exec.plan import QueryPlan, plan_queries
+        from repro.obs.stats import init_search_stats, stats_to_host
+        from repro.search.batched import prepare_states_extended
+
+        if plan not in PLANS:
+            raise ValueError(f"plan={plan!r} not in {PLANS}")
+        import jax.numpy as jnp
+
+        B = q.shape[0]
+        cfg = config
+        mi = max_iters if max_iters is not None else 2 * beam_eff
+        wide_mi = mi * cfg.wide_beam_scale
+        wide_beam = max(beam_eff * cfg.wide_beam_scale, beam_eff)
+        wide_expand = cfg.wide_expand if fused else 1
+        wide_expand = min(wide_expand, wide_beam)
+
+        qids, segs, sts, eps_g, eps_w, bfs, pls = [], [], [], [], [], [], []
+        for si, seg in enumerate(self.segments):
+            rows = np.flatnonzero(route[:, si])
+            if rows.size == 0:
+                continue
+            dg = seg.dg
+            st_loc, ep, inv = prepare_states_extended(
+                dg, s_q[rows], t_q[rows]
+            )
+            w = rows.shape[0]
+            if plan == "auto":
+                pb = plan_queries(dg.planner, st_loc, inv, config=cfg)
+                pl, bf = pb.plans, pb.bf_ids
+            elif plan == "graph":
+                pl = np.full(w, int(QueryPlan.GRAPH), dtype=np.int32)
+                bf = np.full((w, cfg.brute_max_valid), -1, dtype=np.int32)
+            elif plan == "wide":
+                pl = np.full(w, int(QueryPlan.GRAPH_WIDE), dtype=np.int32)
+                bf = np.full((w, cfg.brute_max_valid), -1, dtype=np.int32)
+            else:  # forced brute: exact lists; width unified over the
+                # whole worklist below (extra -1 columns annihilate
+                # in-kernel, so one global capacity changes nothing)
+                pl = np.full(w, int(QueryPlan.BRUTE_VALID), dtype=np.int32)
+                bf = [
+                    np.empty(0, np.int32) if inv[j]
+                    else dg.planner.exact_valid_ids(
+                        int(st_loc[j, 0]), int(st_loc[j, 1])
+                    )
+                    for j in range(w)
+                ]
+            ep_g, ep_w = mask_entry_points(ep, pl)
+            qids.append(rows.astype(np.int32))
+            segs.append(np.full(w, si, dtype=np.int32))
+            sts.append(st_loc)
+            eps_g.append(ep_g)
+            eps_w.append(ep_w)
+            bfs.append(bf)
+            pls.append(pl)
+
+        if not qids:
+            # empty worklist: nothing routed anywhere — all-padding result
+            # with NO device dispatch (pinned by the dispatch-count test)
+            ids = np.full((B, fetch), -1, dtype=np.int32)
+            d = np.full((B, fetch), np.inf, dtype=np.float32)
+            st = (stats_to_host(init_search_stats(B, wide_mi))
+                  if stats else None)
+            return ids, d, st
+
+        qid = np.concatenate(qids)
+        seg_arr = np.concatenate(segs)
+        states = np.concatenate(sts, axis=0).astype(np.int32)
+        ep_g = np.concatenate(eps_g)
+        ep_w = np.concatenate(eps_w)
+        plans = np.concatenate(pls)
+        if plan == "brute":
+            lists = [l for bl in bfs for l in bl]
+            cap = max(int(max((l.shape[0] for l in lists), default=1)), 1)
+            cap = 1 << (cap - 1).bit_length()
+            bf = np.full((len(lists), cap), -1, dtype=np.int32)
+            for i, l in enumerate(lists):
+                bf[i, : l.shape[0]] = l
+        else:
+            bf = np.concatenate(bfs, axis=0).astype(np.int32)
+
+        W0 = qid.shape[0]
+        pad = worklist_capacity(W0) - W0
+        if pad:
+            # padding items: query row B (out of bounds -> scatter-dropped),
+            # segment 0, entry points/brute lists empty -> zero device work
+            qid = np.concatenate([qid, np.full(pad, B, np.int32)])
+            seg_arr = np.concatenate([seg_arr, np.zeros(pad, np.int32)])
+            states = np.concatenate(
+                [states, np.zeros((pad, 2), np.int32)], axis=0
+            )
+            ep_g = np.concatenate([ep_g, np.full(pad, -1, np.int32)])
+            ep_w = np.concatenate([ep_w, np.full(pad, -1, np.int32)])
+            bf = np.concatenate(
+                [bf, np.full((pad, bf.shape[1]), -1, np.int32)], axis=0
+            )
+            plans = np.concatenate(
+                [plans, np.full(pad, int(QueryPlan.GRAPH), np.int32)]
+            )
+
+        stack = self.device_stack()
+        lab = stack.flat_labels(fused=fused, packed=self.packed)
+        _note_dispatch()
+        out = worklist_exec_core(
+            stack.flat("table"), stack.flat("nbr"), lab, stack.flat("gids"),
+            jnp.asarray(q), jnp.asarray(qid), jnp.asarray(seg_arr),
+            jnp.asarray(states), jnp.asarray(ep_g), jnp.asarray(ep_w),
+            jnp.asarray(bf), jnp.asarray(plans),
+            k=fetch, beam=beam_eff, wide_beam=wide_beam,
+            max_iters=mi, wide_max_iters=wide_mi,
+            use_ref=use_ref, fused=fused, expand=expand,
+            wide_expand=wide_expand,
+            scales=stack.flat("scales"),
+            norms=stack.flat("norms") if fused else None,
+            stats=stats,
+            node_cap=self.node_capacity, n_sentinel=self._n_sentinel,
+        )
+        ids = np.asarray(out[0])
+        d = np.asarray(out[1])
+        st = stats_to_host(out[2]) if stats else None
+        return ids, d, st
 
     def _rerank_exact(
         self, q: np.ndarray, ids: np.ndarray, d: np.ndarray, k: int

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.predicates import get_relation
 from repro.scale.partition import SegmentGrid
+from repro.search.device_graph import SegmentStack
 from repro.stream.index import CompactionPolicy, CompactionReport, StreamingIndex
 
 
@@ -58,8 +59,11 @@ class SegmentedStreamingIndex:
         self.relation = relation
         self._rel = get_relation(relation)
         self.grid = grid
+        self.node_capacity = int(node_capacity)
+        self.edge_capacity = int(edge_capacity)
         C = grid.num_cells
         self.swap_counts = [0] * C  # per-segment epoch swaps observed
+        self._stack: Optional[SegmentStack] = None
         self.subs: List[StreamingIndex] = [
             StreamingIndex(
                 dim, relation,
@@ -78,7 +82,39 @@ class SegmentedStreamingIndex:
     def _swap_observer(self, cell: int):
         def note(report: CompactionReport) -> None:
             self.swap_counts[cell] += 1
+            # segment-local stack patch: only the swapped cell's slice of
+            # the flat device bundle restages; every other part keeps its
+            # existing device buffers (identity pinned in tests)
+            if self._stack is not None:
+                self._stack.set_segment(cell, *self._stack_part(cell))
         return note
+
+    def _stack_part(self, cell: int):
+        """One segment's current compacted-tier export + live external-id
+        table (a consistent snapshot under the sub-index lock)."""
+        sub = self.subs[cell]
+        with sub._lock:
+            dg = sub._dg
+            gids = np.where(
+                sub._graph_live, sub._graph_ext, -1
+            ).astype(np.int32)
+        return dg, gids
+
+    def device_stack(self) -> SegmentStack:
+        """Flat stacked device bundle over every segment's compacted tier
+        (lazily built; ``on_epoch_swap`` patches ONLY the swapped
+        segment's slice — never a fleet-wide rebuild). Part ``gids`` are
+        live external ids, so the flat-graph layout matches the batch
+        tier's scheduler contract."""
+        if self._stack is None:
+            st = SegmentStack(
+                node_capacity=self.node_capacity,
+                edge_capacity=self.edge_capacity,
+            )
+            for ci in range(self.num_segments):
+                st.append_segment(*self._stack_part(ci))
+            self._stack = st
+        return self._stack
 
     # --- introspection --------------------------------------------------------
 

@@ -390,6 +390,153 @@ def export_device_graph(
     )
 
 
+class SegmentStack:
+    """Flat device-resident concatenation of uniform-capacity segment exports.
+
+    The segmented tier's one-dispatch worklist scheduler
+    (``repro.scale.segmented``) executes ANY routed-segment mix through a
+    single compiled program by searching one *flat* graph: segment ``i``
+    owns rows ``[i·node_capacity, (i+1)·node_capacity)`` of every stacked
+    view, and each part's neighbor table is **pre-offset** by that base at
+    stack time (``nbr + i·node_capacity`` where real, ``-1`` where
+    padding). Pre-offsetting is the whole trick — adjacency is
+    segment-closed, so the unmodified batched search core traverses the
+    flat graph and every query row stays inside its own segment with zero
+    per-row index arithmetic in the inner loop.
+
+    ``gids`` is the device-resident flat-node → global-object id table
+    (``-1`` on capacity-padding rows), indexed inside the jitted merge
+    fold so the per-segment host-side ``np.where`` remap disappears.
+
+    ``set_segment`` replaces exactly one part and drops only the memoized
+    flat concatenations; untouched parts keep the SAME device buffers
+    (object identity — pinned by the streaming epoch-swap regression
+    test), so a segment-local epoch swap restages one segment, not the
+    fleet.
+    """
+
+    def __init__(self, *, node_capacity: int, edge_capacity: int):
+        self.node_capacity = int(node_capacity)
+        self.edge_capacity = int(edge_capacity)
+        self._parts: list = []
+        self._flat: dict = {}
+
+    @property
+    def num_segments(self) -> int:
+        return len(self._parts)
+
+    @property
+    def packed(self) -> bool:
+        return bool(self._parts) and self._parts[0]["labels"].shape[-1] == 2
+
+    @property
+    def quantized(self) -> bool:
+        return bool(self._parts) and self._parts[0]["scales"] is not None
+
+    def part(self, i: int) -> dict:
+        """Segment ``i``'s device part dict (table/scales/norms/nbr/labels/
+        gids) — exposed for the identity assertions in tests."""
+        return self._parts[i]
+
+    def _make_part(self, si: int, dg: "DeviceGraph", gids: np.ndarray) -> dict:
+        import jax.numpy as jnp
+
+        dev = dg.device()
+        ncap, ecap = self.node_capacity, self.edge_capacity
+        if dev.table.shape[0] != ncap:
+            raise ValueError(
+                f"segment export has {dev.table.shape[0]} node rows, "
+                f"stack capacity is {ncap}"
+            )
+        if dev.nbr.shape[1] != ecap:
+            raise ValueError(
+                f"segment export has edge capacity {dev.nbr.shape[1]}, "
+                f"stack capacity is {ecap}"
+            )
+        if self._parts:
+            ref = self._parts[0]
+            if (dev.scales is None) != (ref["scales"] is None):
+                raise ValueError("mixed quantized/f32 segments in one stack")
+            if dev.labels.shape[-1] != ref["labels"].shape[-1]:
+                raise ValueError("mixed label layouts in one stack")
+        base = jnp.int32(si * ncap)
+        nbr = jnp.where(dev.nbr >= 0, dev.nbr + base, jnp.int32(-1))
+        g = np.full(ncap, -1, dtype=np.int32)
+        gids = np.asarray(gids).reshape(-1)
+        g[: gids.shape[0]] = gids.astype(np.int32)
+        return {
+            "table": dev.table,
+            "scales": dev.scales,
+            "norms": dev.norms,
+            "nbr": nbr,
+            "labels": dev.labels,
+            "gids": jnp.asarray(g),
+        }
+
+    def append_segment(self, dg: "DeviceGraph", gids: np.ndarray) -> None:
+        """Append one segment's export as the next leading-axis slice."""
+        self._parts.append(self._make_part(len(self._parts), dg, gids))
+        self._flat.clear()
+
+    def set_segment(self, i: int, dg: "DeviceGraph", gids: np.ndarray) -> None:
+        """Replace segment ``i``'s part (epoch swap); every other part's
+        device buffers are untouched — only the flat memos rebuild."""
+        self._parts[i] = self._make_part(i, dg, gids)
+        self._flat.clear()
+
+    def flat(self, key: str):
+        """Memoized flat ``[S·node_capacity, ...]`` concatenation of one
+        component (``table``/``scales``/``norms``/``nbr``/``labels``/
+        ``labels_i32``/``gids``). ``scales`` returns ``None`` on a pure
+        f32 stack."""
+        out = self._flat.get(key)
+        if out is None:
+            import jax.numpy as jnp
+
+            if key == "labels_i32":
+                parts = [
+                    unpack_labels_device(p["labels"])
+                    if p["labels"].shape[-1] == 2 else p["labels"]
+                    for p in self._parts
+                ]
+            else:
+                parts = [p[key] for p in self._parts]
+                if any(v is None for v in parts):
+                    return None
+            out = jnp.concatenate(parts, axis=0)
+            self._flat[key] = out
+        return out
+
+    def flat_labels(self, *, fused: bool = True, packed: bool | None = None):
+        """Flat label view under the same layout rule as
+        ``DeviceGraph.serving_labels`` (packed words when available and the
+        caller runs fused; the int32 parity-oracle layout otherwise)."""
+        if packed is None:
+            packed = self.packed
+        elif packed and not self.packed:
+            raise ValueError(
+                "packed=True but the stack carries no packed labels"
+            )
+        if fused and packed:
+            return self.flat("labels")
+        return self.flat("labels_i32") if self.packed else self.flat("labels")
+
+    def nbytes_by_component(self) -> dict:
+        """DEVICE bytes per stacked component (the scheduler's resident
+        footprint — reported separately from ``SegmentedIndex.nbytes``,
+        whose at-rest accounting stays host-side and sums-exact)."""
+        out: dict = {}
+        for p in self._parts:
+            for key in ("table", "scales", "norms", "nbr", "labels", "gids"):
+                v = p.get(key)
+                if v is not None:
+                    out[key] = out.get(key, 0) + int(v.nbytes)
+        return out
+
+    def nbytes(self) -> int:
+        return sum(self.nbytes_by_component().values())
+
+
 class BroadExport:
     """Incrementally-maintained *broad* (label-ignoring) device adjacency.
 

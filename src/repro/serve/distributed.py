@@ -227,7 +227,44 @@ def segments_to_sharded_index(segidx) -> tuple:
         relation=segidx.relation.name, n_local=n_l,
         planners=[dg.planner for dg in dgs],
     )
+    _prime_device_from_stack(sharded, segidx, E=E, lab_shape=lab.shape)
     return sharded, id_map
+
+
+def _prime_device_from_stack(sharded: ShardedIndex, segidx, *, E, lab_shape):
+    """Pre-populate the sharded device bundle from the segmented tier's
+    flat ``SegmentStack`` — the graph topology and label table (the two
+    largest components) are DERIVED from the scheduler's stacked buffers
+    on device (un-offsetting the flat adjacency, reshaping the labels)
+    instead of re-staging independent host copies. Vectors and norms still
+    stage from the host stack: the sharded contract is f32 rows + f32-row
+    norms, which an int8-resident stack does not carry. Skipped when the
+    stack's layout diverges from the stacked host arrays (never the case
+    for a uniform segmented export — belt and braces)."""
+    try:
+        stack = segidx.device_stack()
+    except (AttributeError, ValueError):
+        return
+    S = stack.num_segments
+    ncap = stack.node_capacity
+    if (stack.edge_capacity != E or S != sharded.num_shards
+            or ncap != sharded.n_local):
+        return
+    flat_lab = stack.flat("labels")
+    if flat_lab.shape[-1] != lab_shape[-1]:
+        return
+    flat_nbr = stack.flat("nbr")
+    base = (jnp.arange(S, dtype=jnp.int32) * ncap)[:, None, None]
+    nbr_dev = flat_nbr.reshape(S, ncap, E)
+    nbr_dev = jnp.where(nbr_dev >= 0, nbr_dev - base, jnp.int32(-1))
+    dev = {
+        "nbr": nbr_dev,
+        "labels": flat_lab.reshape(lab_shape),
+    }
+    for name in ("vectors", "norms", "U_X", "U_Y", "num_y",
+                 "entry_node", "entry_y_rank"):
+        dev[name] = jnp.asarray(getattr(sharded, name))
+    sharded._cache = {"device": dev}
 
 
 def remap_shard_ids(id_map: np.ndarray, gids: np.ndarray) -> np.ndarray:

@@ -27,14 +27,20 @@ from repro.data import (
     make_vectors,
     recall_at_k,
 )
-from repro.exec import execute_batch, planned_exec_cache_size
+from repro.exec import (
+    execute_batch,
+    planned_exec_cache_size,
+    worklist_exec_cache_size,
+)
 from repro.scale import (
     SegmentGrid,
     SegmentedIndex,
     SegmentedStreamingIndex,
     build_segmented_index,
     canonicalize_batch,
+    dispatch_count,
     merge_fold_cache_size,
+    worklist_capacity,
 )
 from repro.search import export_device_graph
 from repro.stream.index import CompactionPolicy
@@ -283,7 +289,8 @@ def test_no_recompile_across_segment_mixes(seg_env):
     """Mixed routed-segment counts must reuse the SAME compiled executor and
     merge-fold programs (jit-cache idiom from test_planner.py). Distinct
     k/beam from every other test so the first search compiles exactly one
-    new variant of each."""
+    new variant of each. ``scheduler=False`` pins the legacy per-segment
+    loop — the parity oracle keeps its own no-recompile guarantee."""
     idx, qs = seg_env["idx"], seg_env["qs"]
     B = 8
     qv = qs.vectors[:B]
@@ -291,7 +298,7 @@ def test_no_recompile_across_segment_mixes(seg_env):
     exec0 = planned_exec_cache_size()
     fold0 = merge_fold_cache_size()
     # mix 1: normal queries (route to several segments each)
-    idx.search(qv, qs.s_q[:B], qs.t_q[:B], k=7, beam=48)
+    idx.search(qv, qs.s_q[:B], qs.t_q[:B], k=7, beam=48, scheduler=False)
     exec1 = planned_exec_cache_size()
     fold1 = merge_fold_cache_size()
     assert exec1 - exec0 == 1, (exec0, exec1)
@@ -305,15 +312,158 @@ def test_no_recompile_across_segment_mixes(seg_env):
     wide_s = np.full(B, float(s.min()))
     wide_t = np.full(B, float(t.max()))
     _, _, r_narrow = idx.search(qv, narrow_s, narrow_t, k=7, beam=48,
-                                return_route=True)
+                                return_route=True, scheduler=False)
     _, _, r_wide = idx.search(qv, wide_s, wide_t, k=7, beam=48,
-                              return_route=True)
+                              return_route=True, scheduler=False)
     # the wide mix routes every (query, segment) pair; the narrow mix is a
     # (possibly strict) subset — both reuse the warm programs
     assert r_wide.all()
     assert r_wide.sum() >= r_narrow.sum()
     assert planned_exec_cache_size() == exec1
     assert merge_fold_cache_size() == fold1
+
+
+# --- tentpole: worklist scheduler — one dispatch, bit-identical results -------
+
+
+def test_worklist_single_dispatch_bit_parity(seg_env):
+    """The scheduler must return byte-for-byte what the per-segment loop
+    returns (ids AND distances, with and without the rerank tail) while
+    issuing ONE device dispatch for the whole routed mix instead of one
+    per routed segment."""
+    idx, qs = seg_env["idx"], seg_env["qs"]
+    for rerank in (False, True):
+        d0 = dispatch_count()
+        out_s = idx.search(qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
+                           rerank=rerank, return_route=True, scheduler=True)
+        d1 = dispatch_count()
+        out_l = idx.search(qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
+                           rerank=rerank, return_route=True, scheduler=False)
+        d2 = dispatch_count()
+        np.testing.assert_array_equal(out_s[0], out_l[0])
+        np.testing.assert_array_equal(out_s[1], out_l[1])
+        np.testing.assert_array_equal(out_s[2], out_l[2])
+        route = out_s[2]
+        n_routed = int(route.any(axis=0).sum())
+        assert n_routed >= 2  # the mix is non-trivial
+        assert d1 - d0 == 1, (d0, d1)
+        assert d2 - d1 == n_routed, (d1, d2, n_routed)
+
+
+@pytest.mark.parametrize("relname", RELATION_NAMES)
+def test_worklist_bit_parity_all_relations(relname):
+    """Scheduler vs loop parity under every relation mapping (distinct
+    dominance-space shapes route distinct segment mixes)."""
+    n, d = 700, 8
+    vecs = make_vectors(n, d, seed=13)
+    s, t = _intervals(np.random.default_rng(13), n)
+    idx = build_segmented_index(
+        vecs, s, t, relname, cells_per_axis=2, M=8, Z=32, K_p=4,
+        quantize_int8=True,
+    )
+    qv = make_queries_vectors(12, d, seed=5)
+    qs = ground_truth(
+        generate_queries(qv, s, t, relname, 0.1, k=10, seed=9), vecs, s, t)
+    a = idx.search(qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
+                   rerank=False, scheduler=True)
+    b = idx.search(qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
+                   rerank=False, scheduler=False)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+@pytest.mark.parametrize("plan", ["graph", "wide", "brute"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_worklist_plan_mode_parity(seg_env, plan, fused):
+    """Forced plan modes (incl. the ragged brute-list path, which the
+    scheduler pads to ONE worklist-wide power-of-two capacity) and both
+    label layouts stay bit-identical to the loop."""
+    idx, qs = seg_env["idx"], seg_env["qs"]
+    a = idx.search(qs.vectors, qs.s_q, qs.t_q, k=6, beam=32, plan=plan,
+                   fused=fused, rerank=False, scheduler=True)
+    b = idx.search(qs.vectors, qs.s_q, qs.t_q, k=6, beam=32, plan=plan,
+                   fused=fused, rerank=False, scheduler=False)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_worklist_bucket_no_recompile(seg_env):
+    """Routed-mix changes land in a small closed set of quarter-octave
+    worklist buckets: after warming each mix's bucket once, re-running
+    EVERY mix adds zero compiled variants of ``worklist_exec_core``."""
+    idx, qs = seg_env["idx"], seg_env["qs"]
+    s, t = seg_env["s"], seg_env["t"]
+    B = 8
+    qv = qs.vectors[:B]
+    narrow_s = np.full(B, float(np.median(s)))
+    narrow_t = narrow_s + 0.5
+    wide_s = np.full(B, float(s.min()))
+    wide_t = np.full(B, float(t.max()))
+    mixes = [
+        (qs.s_q[:B], qs.t_q[:B]),   # normal: several segments per query
+        (narrow_s, narrow_t),       # narrow: few (query, segment) pairs
+        (wide_s, wide_t),           # maximal: every pair routed
+    ]
+    for sq, tq in mixes:            # warm each mix's bucket
+        idx.search(qv, sq, tq, k=9, beam=40)
+    warm = worklist_exec_cache_size()
+    for sq, tq in mixes:
+        idx.search(qv, sq, tq, k=9, beam=40)
+    assert worklist_exec_cache_size() == warm
+
+
+def test_worklist_capacity_buckets():
+    # quarter-octave ladder: pow2 plus the 1.25/1.5/1.75 steps
+    assert [worklist_capacity(w) for w in (0, 1, 7, 8, 9, 11, 39, 64, 65)] \
+        == [8, 8, 8, 8, 10, 12, 40, 64, 80]
+    for w in (1, 5, 8, 13, 39, 100, 1000):
+        cap = worklist_capacity(w)
+        assert cap >= max(w, 8)
+        assert cap < 2 * max(w, 8)      # waste strictly under 2x
+        assert cap <= 1.25 * max(w, 8) or cap == 8  # <= 25% padding
+        # cap is pow2 or pow2 * {1.25, 1.5, 1.75}
+        base = 1 << (cap.bit_length() - 1)
+        assert cap * 4 % base == 0
+
+
+def test_empty_worklist_no_dispatch(seg_env):
+    """An all-invalid batch produces an empty worklist: the scheduler must
+    return the padded empty result WITHOUT touching the device."""
+    idx = seg_env["idx"]
+    q = make_queries_vectors(4, seg_env["vecs"].shape[1], seed=77)
+    sq = np.full(4, 1e9)
+    tq = np.full(4, 2e9)
+    d0 = dispatch_count()
+    ids, d, st = idx.search(q, sq, tq, k=5, scheduler=True, stats=True)
+    assert dispatch_count() == d0
+    assert np.all(ids == -1)
+    assert np.all(np.isinf(d))
+    # zero stats, field-identical to the loop path's empty case
+    _, _, st_l = idx.search(q, sq, tq, k=5, scheduler=False, stats=True)
+    for name in st._fields:
+        np.testing.assert_array_equal(
+            getattr(st, name), getattr(st_l, name), err_msg=name)
+
+
+def test_worklist_stats_parity(seg_env):
+    """SearchStats out of the scheduler's one dispatch (scatter-added over
+    the worklist) must equal the loop's ``combine_stats`` fold field by
+    field — the counters are per-query trajectory sums, and the
+    trajectory sets are identical."""
+    idx, qs = seg_env["idx"], seg_env["qs"]
+    # plan="graph" guarantees every routed pair actually traverses (the
+    # auto planner may legally brute the whole batch, where counters are
+    # all-zero by contract — that case is still compared, via "auto")
+    for plan, check_nonzero in (("graph", True), ("auto", False)):
+        *_, st_s = idx.search(qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
+                              plan=plan, scheduler=True, stats=True)
+        *_, st_l = idx.search(qs.vectors, qs.s_q, qs.t_q, k=10, beam=64,
+                              plan=plan, scheduler=False, stats=True)
+        if check_nonzero:
+            assert int(np.sum(st_s.cand_total)) > 0
+        for name in st_s._fields:
+            np.testing.assert_array_equal(
+                getattr(st_s, name), getattr(st_l, name), err_msg=name)
 
 
 # --- satellite: byte accounting -----------------------------------------------
@@ -442,6 +592,88 @@ def test_streaming_segment_local_epoch_swap():
             best = vids[np.argmin(dd)]
             got = {ext_meta[int(e)] for e in ids[b] if e >= 0}
             assert best in got, b
+
+
+# --- satellite: segment-local stack patch on streaming epoch swap -------------
+
+
+def test_streaming_stack_patch_is_segment_local():
+    """``on_epoch_swap`` must restage ONLY the swapped segment's slice of
+    the flat device stack: every other part keeps the very same device
+    buffers (object identity), and the flat concat is invalidated so the
+    next read sees the new epoch."""
+    rng = np.random.default_rng(44)
+    d = 6
+    s0, t0 = _intervals(rng, 300)
+    rel = get_relation("overlap")
+    space = DominanceSpace.from_intervals(rel, s0, t0)
+    grid = SegmentGrid.from_space(space, 2)
+    idx = SegmentedStreamingIndex(
+        d, "overlap", grid,
+        node_capacity=512, delta_capacity=128, edge_capacity=64,
+        M=6, Z=24, K_p=4,
+        policy=CompactionPolicy(max_delta_fraction=0.05, min_mutations=16),
+        build_kwargs=dict(M=6, Z=24, K_p=4),
+    )
+    vecs = make_vectors(300, d, seed=8)
+    idx.insert_batch(vecs, s0, t0)
+
+    stack = idx.device_stack()
+    assert stack.num_segments == idx.num_segments
+    before = [stack.part(ci) for ci in range(stack.num_segments)]
+    flat0 = stack.flat("nbr")  # materialize the concat cache
+
+    # trip the policy in exactly one hot segment via deletes
+    hot = int(np.argmax(idx.epochs()))
+    for e in idx.subs[hot].live_ids()[:24]:
+        assert idx.delete(int(e))
+    reports = idx.maybe_compact()
+    assert hot in reports
+
+    after = [stack.part(ci) for ci in range(stack.num_segments)]
+    for ci in range(stack.num_segments):
+        for key in ("table", "nbr", "labels", "gids"):
+            same = after[ci][key] is before[ci][key]
+            if ci in reports:
+                assert not same, (ci, key)
+            else:
+                assert same, (ci, key)
+    # the flat concat restaged and reflects the swapped segment's new
+    # live-id table (the deleted rows left the gids slice)
+    flat1 = stack.flat("nbr")
+    assert flat1 is not flat0
+    ncap = stack.node_capacity
+    gids = np.asarray(stack.flat("gids"))
+    live = set(idx.subs[hot].live_ids().tolist())
+    seg_gids = gids[hot * ncap : (hot + 1) * ncap]
+    assert set(seg_gids[seg_gids >= 0].tolist()) == live
+
+
+# --- satellite: sharded serving device bundle derives from the stack ----------
+
+
+def test_sharded_device_bundle_reuses_segment_stack():
+    """``segments_to_sharded_index`` primes the sharded device cache from
+    the scheduler's flat ``SegmentStack`` (un-offsetting the adjacency on
+    device) — the derived bundle must equal the stacked host arrays
+    exactly."""
+    vecs, s, t = make_dataset(600, 8, seed=17)
+    idx = build_segmented_index(
+        vecs, s, t, "overlap", cells_per_axis=2, M=8, Z=32, K_p=4,
+        quantize_int8=False,
+    )
+    from repro.serve.distributed import segments_to_sharded_index
+
+    sharded, id_map = segments_to_sharded_index(idx)
+    assert sharded._cache is not None  # primed at build, not first use
+    dev = sharded.device()
+    np.testing.assert_array_equal(np.asarray(dev["nbr"]), sharded.nbr)
+    np.testing.assert_array_equal(np.asarray(dev["labels"]), sharded.labels)
+    np.testing.assert_array_equal(np.asarray(dev["vectors"]), sharded.vectors)
+    # id_map agrees with the stack's device-resident global-id table
+    gids = np.asarray(idx.device_stack().flat("gids")).reshape(
+        sharded.num_shards, sharded.n_local)
+    np.testing.assert_array_equal(gids, id_map.astype(np.int32))
 
 
 # --- satellite: segment-sharded serving (multi-host-device, subprocess) -------
