@@ -1,0 +1,217 @@
+"""Crash-recovery benchmark (ISSUE 10): checkpoint+WAL-tail recovery vs a
+cold rebuild, raw WAL replay throughput, and degraded-mode serving cost.
+
+Rows:
+  recovery.checkpoint_recover   seconds to bring a crashed segmented index
+                                back to serving (newest consistent
+                                generation + per-segment WAL tails,
+                                concurrent across cells), with the speedup
+                                vs the cold path — the PR gate is >= 5x
+  recovery.cold_rebuild         seconds to rebuild the same index from the
+                                raw vectors (what a deployment without the
+                                durability layer would pay)
+  recovery.wal_replay           pure log-replay throughput (records/s) —
+                                the snapshot-less worst case
+  recovery.search_healthy       batched query us/query, all segments up
+  recovery.search_degraded      same batch with one segment quarantined —
+                                degraded serving must not be SLOWER than
+                                healthy (it does strictly less work)
+
+Emits a machine-readable ``BENCH_recovery.json`` at the repo root with the
+gate verdict. ``--tiny`` (or ``main(tiny=True)``) shrinks everything for
+the CI smoke.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.predicates import DominanceSpace, get_relation
+from repro.data import make_dataset, make_queries_vectors
+from repro.scale import SegmentGrid, SegmentedStreamingIndex
+from repro.stream.index import CompactionPolicy
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_recovery.json"
+
+RELATION = "overlap"
+GATE_MIN_SPEEDUP = 5.0
+
+
+def _fixture(n, dim):
+    vecs, s, t = make_dataset(n, dim, seed=41)
+    rel = get_relation(RELATION)
+    grid = SegmentGrid.from_space(
+        DominanceSpace.from_intervals(rel, s, t), 2
+    )
+    return vecs, s, t, grid
+
+
+def _make(dim, grid, storage, *, n):
+    return SegmentedStreamingIndex(
+        dim, RELATION, grid,
+        node_capacity=2 * n, delta_capacity=max(64, n // 16),
+        edge_capacity=32, M=8, Z=32, K_p=4,
+        policy=CompactionPolicy(max_delta_fraction=0.1, min_mutations=64),
+        build_kwargs=dict(M=8, Z=32, K_p=4),
+        storage_dir=storage,
+    )
+
+
+def _close(idx):
+    for w in idx._wals:
+        if w is not None:
+            w.close()
+
+
+def _queries(s, t, nq, dim):
+    qv = make_queries_vectors(nq, dim, seed=43)
+    rng = np.random.default_rng(43)
+    lo = rng.uniform(s.min(), np.quantile(s, 0.4), nq)
+    hi = np.maximum(lo + 1.0, np.quantile(t, 0.9))
+    return qv, lo, hi
+
+
+def _bench_recovery(vecs, s, t, grid, *, n, dim, tail) -> dict:
+    """Checkpoint + tail-replay recovery vs cold rebuild of the same state."""
+    work = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        idx = _make(dim, grid, work, n=n)
+        idx.insert_batch(vecs[: n - tail], s[: n - tail], t[: n - tail])
+        idx.maybe_compact()
+        idx.save_snapshot()
+        # post-checkpoint tail: what recovery has to replay from the WALs
+        idx.insert_batch(vecs[n - tail:], s[n - tail:], t[n - tail:])
+        live = idx.live_count
+        _close(idx)            # crash
+
+        t0 = time.perf_counter()
+        rec, report = SegmentedStreamingIndex.recover(
+            work, policy=CompactionPolicy(max_delta_fraction=0.1,
+                                          min_mutations=64),
+            build_kwargs=dict(M=8, Z=32, K_p=4),
+        )
+        recover_s = time.perf_counter() - t0
+        assert rec.live_count == live and not report.quarantined
+        _close(rec)
+
+        t0 = time.perf_counter()
+        cold = _make(dim, grid, None, n=n)
+        cold.insert_batch(vecs, s, t)
+        cold.maybe_compact()
+        cold_s = time.perf_counter() - t0
+        assert cold.live_count == live
+
+        speedup = cold_s / max(recover_s, 1e-9)
+        emit("recovery.checkpoint_recover", recover_s * 1e6,
+             seconds=round(recover_s, 4), speedup=round(speedup, 1),
+             replayed=report.records_replayed,
+             generation=report.generation)
+        emit("recovery.cold_rebuild", cold_s * 1e6,
+             seconds=round(cold_s, 4))
+        return {
+            "recovery_seconds": round(recover_s, 6),
+            "cold_rebuild_seconds": round(cold_s, 6),
+            "speedup": round(speedup, 2),
+            "records_replayed": int(report.records_replayed),
+            "gate_min_speedup": GATE_MIN_SPEEDUP,
+            "gate_ok": bool(speedup >= GATE_MIN_SPEEDUP),
+        }
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def _bench_wal_replay(vecs, s, t, grid, *, n, dim) -> dict:
+    """Snapshot-less recovery: every record comes back through the log."""
+    work = tempfile.mkdtemp(prefix="bench_recovery_wal_")
+    try:
+        idx = _make(dim, grid, work, n=n)
+        idx.insert_batch(vecs, s, t)
+        _close(idx)
+
+        t0 = time.perf_counter()
+        rec, report = SegmentedStreamingIndex.recover(
+            work, policy=CompactionPolicy(max_delta_fraction=0.1,
+                                          min_mutations=64),
+            build_kwargs=dict(M=8, Z=32, K_p=4),
+        )
+        replay_s = time.perf_counter() - t0
+        assert report.records_replayed == n
+        _close(rec)
+        rps = n / max(replay_s, 1e-9)
+        emit("recovery.wal_replay", replay_s / n * 1e6,
+             records_per_s=int(rps), records=n)
+        return {"replay_seconds": round(replay_s, 6),
+                "records": n, "records_per_s": round(rps, 1)}
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def _bench_degraded(vecs, s, t, grid, *, n, dim, nq, rounds) -> dict:
+    """Healthy vs one-segment-quarantined serving throughput."""
+    idx = _make(dim, grid, None, n=n)
+    idx.insert_batch(vecs, s, t)
+    idx.maybe_compact()
+    qv, s_q, t_q = _queries(s, t, nq, dim)
+
+    def loop():
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            idx.search(qv, s_q, t_q, k=10)
+        return (time.perf_counter() - t0) / (rounds * nq) * 1e6
+
+    idx.search(qv, s_q, t_q, k=10)          # warm compile
+    healthy_us = loop()
+    victim = int(np.argmax([sub.live_count for sub in idx.subs]))
+    idx.quarantine_segment(victim, "bench")
+    _, _, info = idx.search(qv, s_q, t_q, k=10, return_partial=True)
+    degraded_us = loop()
+    emit("recovery.search_healthy", healthy_us, qps=int(1e6 / healthy_us))
+    emit("recovery.search_degraded", degraded_us,
+         qps=int(1e6 / degraded_us),
+         missing=len(info.missing_segments))
+    return {
+        "healthy_us_per_query": round(healthy_us, 2),
+        "degraded_us_per_query": round(degraded_us, 2),
+        "degraded_over_healthy": round(degraded_us / healthy_us, 3),
+        "quarantined_segment": victim,
+        "degraded_flagged": bool(info.degraded),
+    }
+
+
+def main(tiny: bool = False) -> None:
+    if tiny:
+        n, dim, tail, nq, rounds = 360, 8, 60, 8, 3
+    else:
+        n, dim, tail, nq, rounds = 4000, 32, 400, 32, 8
+    vecs, s, t, grid = _fixture(n, dim)
+    record = {
+        "bench": "recovery",
+        "tiny": tiny,
+        "n": n,
+        "dim": dim,
+        "recovery": _bench_recovery(vecs, s, t, grid, n=n, dim=dim,
+                                    tail=tail),
+        "wal_replay": _bench_wal_replay(vecs, s, t, grid, n=n, dim=dim),
+        "serving": _bench_degraded(vecs, s, t, grid, n=n, dim=dim,
+                                   nq=nq, rounds=rounds),
+    }
+    JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
+    assert record["recovery"]["gate_ok"], (
+        f"recovery speedup {record['recovery']['speedup']}x below the "
+        f"{GATE_MIN_SPEEDUP}x gate"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="CI smoke scale")
+    main(tiny=ap.parse_args().tiny)

@@ -54,7 +54,62 @@ REQUIRED_SERIES = (
     "repro_planner_routes_total",
     "repro_span_seconds",
     "repro_epoch",
+    # durability series (ISSUE 10): the same scrape must carry the
+    # recovery/quarantine story a crashed deployment would be read by
+    "repro_recovery_seconds",
+    "repro_wal_replayed_records_total",
+    "repro_segments_quarantined",
+    "repro_snapshot_bytes",
+    "repro_snapshot_seconds",
 )
+
+
+def _durability_exercise(reg, *, tiny: bool) -> dict:
+    """Checkpoint + crash + recover + quarantine/heal against the SAME
+    registry the serving loop used, so one scrape carries the durability
+    series the CI smoke asserts on."""
+    import shutil
+    import tempfile
+
+    from repro.core.predicates import DominanceSpace, get_relation
+    from repro.scale import SegmentGrid, SegmentedStreamingIndex
+    from repro.stream.index import CompactionPolicy
+
+    n, dim = (160, 8) if tiny else (400, 16)
+    tail = n // 8
+    vecs, s, t = make_dataset(n, dim, seed=51)
+    grid = SegmentGrid.from_space(
+        DominanceSpace.from_intervals(get_relation("overlap"), s, t), 2
+    )
+    policy = CompactionPolicy(max_delta_fraction=0.1, min_mutations=32)
+    bk = dict(M=6, Z=24, K_p=4)
+    work = tempfile.mkdtemp(prefix="bench_telemetry_dur_")
+    try:
+        idx = SegmentedStreamingIndex(
+            dim, "overlap", grid, node_capacity=2 * n, delta_capacity=64,
+            edge_capacity=16, M=6, Z=24, K_p=4, policy=policy,
+            build_kwargs=bk, storage_dir=work, registry=reg,
+        )
+        idx.insert_batch(vecs[: n - tail], s[: n - tail], t[: n - tail])
+        idx.save_snapshot()
+        idx.insert_batch(vecs[n - tail:], s[n - tail:], t[n - tail:])
+        for w in idx._wals:
+            if w is not None:
+                w.close()
+        rec, report = SegmentedStreamingIndex.recover(
+            work, policy=policy, build_kwargs=bk, registry=reg,
+        )
+        rec.quarantine_segment(0, "bench telemetry")
+        healed = rec.maybe_rebuild()
+        for w in rec._wals:
+            if w is not None:
+                w.close()
+        return {
+            "records_replayed": int(report.records_replayed),
+            "quarantine_healed": bool(healed.get(0)),
+        }
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
 
 
 def _registry_micro(n_ops: int) -> dict:
@@ -123,6 +178,7 @@ def _serving_loop(*, n, dim, n_requests, batch_size, tiny) -> dict:
 
     lat = reg.histogram("repro_request_latency_seconds").summary()
     occ = reg.histogram("repro_batch_occupancy").summary()
+    durability = _durability_exercise(reg, tiny=tiny)
     text = to_prometheus_text(reg)
     samples = parse_prometheus_text(text)
     present = {
@@ -151,6 +207,7 @@ def _serving_loop(*, n, dim, n_requests, batch_size, tiny) -> dict:
             "repro_search_delta_candidates_valid_total", 0.0),
         "export_series": len(samples),
         "export_bytes": len(text),
+        "durability": durability,
     }
     emit(
         "telemetry.serving.instrumented", 1e6 / qps,

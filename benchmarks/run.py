@@ -25,6 +25,7 @@ from benchmarks import (
     bench_serving,
     bench_streaming,
     bench_telemetry,
+    bench_recovery,
 )
 
 ALL = [
@@ -43,6 +44,7 @@ ALL = [
     ("distributed_serving", bench_serving.main),
     ("streaming_index", bench_streaming.main),
     ("telemetry", bench_telemetry.main),
+    ("crash_recovery", bench_recovery.main),
 ]
 
 

@@ -49,6 +49,10 @@ LATENCY_BUCKETS_S: Tuple[float, ...] = (
 COUNT_BUCKETS: Tuple[float, ...] = tuple(
     float(1 << i) for i in range(0, 21)
 )
+# Sizes: 1 KiB to 1 GiB in powers of two — snapshot files, WAL segments.
+BYTES_BUCKETS: Tuple[float, ...] = tuple(
+    float(1 << i) for i in range(10, 31)
+)
 FRACTION_BUCKETS: Tuple[float, ...] = (
     0.01, 0.025, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9,
     0.95, 0.99, 1.0,

@@ -3,10 +3,21 @@
 ``partition`` — the G×G-aligned segment grid + recall-safe coarse router;
 ``segmented`` — the batch-built segmented index (concurrent wave builds,
 int8-resident segments, routed execution, exact f32 rerank tail);
-``stream`` — the segment-local streaming tier (per-segment epoch swaps).
+``stream`` — the segment-local streaming tier (per-segment epoch swaps);
+``durability`` — coordinated per-segment WALs + the CRC-framed manifest
+(crash-safe checkpoints, concurrent recovery, segment quarantine).
 """
+from repro.scale.durability import (
+    CorruptManifestError,
+    SegmentedRecoveryReport,
+    SegmentRecovery,
+    read_manifest,
+    recover_segmented,
+    write_manifest,
+)
 from repro.scale.partition import SegmentGrid, canonicalize_batch
 from repro.scale.segmented import (
+    PartialSearchInfo,
     Segment,
     SegmentedIndex,
     build_segmented_index,
@@ -17,13 +28,20 @@ from repro.scale.segmented import (
 from repro.scale.stream import SegmentedStreamingIndex
 
 __all__ = [
+    "CorruptManifestError",
+    "PartialSearchInfo",
     "Segment",
     "SegmentGrid",
+    "SegmentRecovery",
     "SegmentedIndex",
+    "SegmentedRecoveryReport",
     "SegmentedStreamingIndex",
     "build_segmented_index",
     "canonicalize_batch",
     "dispatch_count",
     "merge_fold_cache_size",
+    "read_manifest",
+    "recover_segmented",
     "worklist_capacity",
+    "write_manifest",
 ]

@@ -69,6 +69,18 @@ class Segment:
     report: BuildReport  # its wave-build report
 
 
+@dataclasses.dataclass
+class PartialSearchInfo:
+    """Degradation flag attached to a search answer when segments are
+    quarantined: the answer is the correct top-k over every SURVIVING
+    segment; ``missing_segments`` lists the quarantined segment indices
+    the batch's route would have touched (objects resident there cannot
+    appear until the segment is rebuilt)."""
+
+    degraded: bool
+    missing_segments: List[int]
+
+
 @functools.partial(jax.jit, static_argnames=("n", "use_ref"))
 def _fold_topk(acc_d, acc_ids, cand_d, cand_ids, *, n: int, use_ref: bool):
     from repro.kernels import ops
@@ -166,6 +178,7 @@ class SegmentedIndex:
         # indices still share the compiled fold
         self._n_sentinel = 1 << max(int(self.n).bit_length(), 1)
         self._stack: Optional[SegmentStack] = None
+        self.quarantined: set = set()
 
     @property
     def num_segments(self) -> int:
@@ -188,6 +201,44 @@ class SegmentedIndex:
     def segment_sizes(self) -> np.ndarray:
         return np.array([seg.ids.shape[0] for seg in self.segments],
                         dtype=np.int64)
+
+    # --- quarantine -----------------------------------------------------------
+
+    def quarantine_segment(self, si: int, reason: str = "operator") -> None:
+        """Mask segment ``si`` out of every future route and scrub its
+        device slice (if staged). Route masking means the worklist
+        scheduler simply gets fewer rows — identical shapes after padding,
+        so the compiled dispatch is reused, never recompiled. Searches
+        stay correct over the survivors; ``return_partial=True`` reports
+        the gap."""
+        from repro.obs.metrics import resolve
+
+        si = int(si)
+        if si in self.quarantined:
+            return
+        self.quarantined.add(si)
+        if self._stack is not None:
+            self._stack.blank_segment(si)
+        resolve(None).gauge(
+            "repro_segments_quarantined", "segments currently quarantined"
+        ).set(len(self.quarantined), tier="batch")
+
+    def lift_quarantine(self, si: int) -> None:
+        """Restore segment ``si`` (its host-side ``Segment`` export is
+        intact — quarantine only masked routing and blanked the staged
+        device slice)."""
+        from repro.obs.metrics import resolve
+
+        si = int(si)
+        if si not in self.quarantined:
+            return
+        self.quarantined.discard(si)
+        if self._stack is not None:
+            seg = self.segments[si]
+            self._stack.set_segment(si, seg.dg, seg.ids)
+        resolve(None).gauge(
+            "repro_segments_quarantined", "segments currently quarantined"
+        ).set(len(self.quarantined), tier="batch")
 
     # --- routing --------------------------------------------------------------
 
@@ -260,6 +311,7 @@ class SegmentedIndex:
         expand: int = 1,
         max_iters: Optional[int] = None,
         return_route: bool = False,
+        return_partial: bool = False,
         scheduler: bool = True,
         stats: bool = False,
     ):
@@ -304,6 +356,13 @@ class SegmentedIndex:
         route = np.zeros((B, self.num_segments), dtype=bool)
         for si, seg in enumerate(self.segments):
             route[:, si] = cells[:, seg.cell]
+        # quarantined segments: drop their route columns BEFORE refinement —
+        # the scheduler's worklist just has fewer rows (no shape change, no
+        # recompile) and the answer is the exact top-k over the survivors
+        missing = [si for si in sorted(self.quarantined)
+                   if route[:, si].any()]
+        if self.quarantined:
+            route[:, sorted(self.quarantined)] = False
         route = self._refine_route(route, x_q, y_q)
 
         if scheduler:
@@ -359,6 +418,10 @@ class SegmentedIndex:
         out = (ids.astype(np.int64), d.astype(np.float32))
         if return_route:
             out += (route,)
+        if return_partial:
+            out += (PartialSearchInfo(
+                degraded=bool(missing), missing_segments=missing,
+            ),)
         if stats:
             out += (st,)
         return out

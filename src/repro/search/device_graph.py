@@ -484,6 +484,27 @@ class SegmentStack:
         self._parts[i] = self._make_part(i, dg, gids)
         self._flat.clear()
 
+    def blank_segment(self, i: int) -> None:
+        """Scrub segment ``i``'s slice in place: zeroed table/labels, empty
+        adjacency, all gids -1. Quarantine uses this so a poisoned
+        segment's rows can never surface — even through a stale route mask,
+        a traversal landing here yields gid -1 (dropped at merge) and no
+        edges to follow. Shapes and dtypes are unchanged, so downstream
+        compiled programs see the same signature (zero recompiles)."""
+        import jax.numpy as jnp
+
+        ref = self._parts[i]
+        self._parts[i] = {
+            "table": jnp.zeros_like(ref["table"]),
+            "scales": None if ref["scales"] is None
+            else jnp.zeros_like(ref["scales"]),
+            "norms": jnp.zeros_like(ref["norms"]),
+            "nbr": jnp.full_like(ref["nbr"], -1),
+            "labels": jnp.zeros_like(ref["labels"]),
+            "gids": jnp.full_like(ref["gids"], -1),
+        }
+        self._flat.clear()
+
     def flat(self, key: str):
         """Memoized flat ``[S·node_capacity, ...]`` concatenation of one
         component (``table``/``scales``/``norms``/``nbr``/``labels``/

@@ -32,6 +32,7 @@ from repro.core.predicates import get_relation
 from repro.exec import (
     PlannerConfig,
     QueryPlan,
+    SelectivityEstimator,
     default_planner_config,
     plan_queries,
 )
@@ -221,11 +222,27 @@ def segments_to_sharded_index(segidx) -> tuple:
         enty[i, :kx] = dg.entry_y_rank
         seg = segidx.segments[i]
         id_map[i, : seg.ids.shape[0]] = seg.ids
+    planners = [dg.planner for dg in dgs]
+    # quarantined segments serve as provably-empty shards: no entry points
+    # (graph walks cannot start), an n=0 estimator (every count bound is 0,
+    # so the planner routes BRUTE over an empty id list) and a -1 id_map
+    # row (any stray synthetic id remaps to the drop sentinel). The shard
+    # axis keeps its full extent — same mesh, same compiled step.
+    for si in sorted(getattr(segidx, "quarantined", ())):
+        ent[si, :] = -1
+        enty[si, :] = np.iinfo(np.int32).max
+        id_map[si, :] = -1
+        p = planners[si]
+        if p is not None:
+            planners[si] = SelectivityEstimator(
+                np.empty(0, np.int64), np.empty(0, np.int64),
+                p.num_x, p.num_y, buckets=p.buckets,
+            )
     sharded = ShardedIndex(
         vectors=vec, nbr=nbr, labels=lab, norms=nrm, U_X=UX, U_Y=UY,
         num_y=num_y, entry_node=ent, entry_y_rank=enty,
         relation=segidx.relation.name, n_local=n_l,
-        planners=[dg.planner for dg in dgs],
+        planners=planners,
     )
     _prime_device_from_stack(sharded, segidx, E=E, lab_shape=lab.shape)
     return sharded, id_map
@@ -541,7 +558,9 @@ def serve_batch(
     plan: str = "auto",
     planner_config: PlannerConfig | None = None,
     id_map: np.ndarray | None = None,
-) -> Tuple[np.ndarray, np.ndarray]:
+    missing_shards: Sequence[int] | None = None,
+    return_partial: bool = False,
+):
     """Host entry point: run one distributed batch end-to-end.
 
     ``plan="auto"`` plans each (query, shard) pair from the shard's
@@ -552,7 +571,13 @@ def serve_batch(
     here so callers see dataset ids — unless ``id_map`` is given (a
     segment-stacked index from :func:`segments_to_sharded_index`, whose
     membership is dominance-driven, not round-robin), in which case ids
-    are translated through :func:`remap_shard_ids` instead."""
+    are translated through :func:`remap_shard_ids` instead.
+
+    ``return_partial=True`` wraps the answer in a :class:`PartialResult`
+    whose ``missing_shards`` comes from the caller (typically the
+    segmented tier's quarantine list — the shards masked out of this
+    index by :func:`segments_to_sharded_index`) so clients see a correct
+    top-k over the surviving shards explicitly flagged as degraded."""
     if plan not in ("auto", "graph"):
         raise ValueError(f"plan={plan!r} not in ('auto', 'graph')")
     # boundary hardening: a NaN/Inf anywhere in the batch silently poisons
@@ -606,11 +631,19 @@ def serve_batch(
     gids = np.asarray(gids)
     d = np.asarray(d)
     if id_map is not None:
-        return remap_shard_ids(id_map, gids), d
-    shard = gids // idx.n_local
-    local = gids % idx.n_local
-    orig = np.where(gids >= 0, local * idx.num_shards + shard, -1)
-    return orig, d
+        ids = remap_shard_ids(id_map, gids)
+    else:
+        shard = gids // idx.n_local
+        local = gids % idx.n_local
+        ids = np.where(gids >= 0, local * idx.num_shards + shard, -1)
+    if return_partial:
+        missing = sorted(int(s) for s in (missing_shards or ()))
+        d = np.where(ids >= 0, d, np.inf).astype(np.float32)
+        return PartialResult(
+            ids=ids, dists=d, degraded=bool(missing),
+            missing_shards=missing,
+        )
+    return ids, d
 
 
 # --- partial-result merge (degraded responses under shard loss) ----------------

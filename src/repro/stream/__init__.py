@@ -16,22 +16,26 @@ from repro.stream.search import (
     streaming_search_core,
 )
 from repro.stream.wal import (
+    CorruptSnapshotError,
     RecoveryReport,
     ReplayReport,
     WalRecord,
     WriteAheadLog,
+    file_digest,
     recover,
 )
 
 __all__ = [
     "CompactionPolicy",
     "CompactionReport",
+    "CorruptSnapshotError",
     "DeltaBuffer",
     "RecoveryReport",
     "ReplayReport",
     "StreamingIndex",
     "WalRecord",
     "WriteAheadLog",
+    "file_digest",
     "planned_streaming_search_core",
     "query_key_state",
     "recover",

@@ -417,6 +417,7 @@ class StreamingIndex:
                 arrays["pl_meta"] = np.array(
                     [pl.num_x, pl.num_y, pl.buckets], np.int64
                 )
+            t0 = time.perf_counter()
             tmp = f"{path}.tmp.{os.getpid()}"
             with open(tmp, "wb") as fh:
                 np.savez(fh, **arrays)
@@ -424,6 +425,21 @@ class StreamingIndex:
                 os.fsync(fh.fileno())
             os.replace(tmp, path)
             _fsync_dir(os.path.dirname(os.path.abspath(path)))
+            from repro.obs.metrics import (
+                BYTES_BUCKETS,
+                LATENCY_BUCKETS_S,
+                resolve,
+            )
+
+            reg = resolve(None)
+            reg.histogram(
+                "repro_snapshot_bytes", "snapshot file size",
+                buckets=BYTES_BUCKETS,
+            ).observe(os.path.getsize(path))
+            reg.histogram(
+                "repro_snapshot_seconds", "snapshot serialize+fsync wall clock",
+                buckets=LATENCY_BUCKETS_S,
+            ).observe(time.perf_counter() - t0)
             if prune_wal and self._wal is not None:
                 self._wal.prune(self._applied_lsn)
         return path
@@ -435,6 +451,7 @@ class StreamingIndex:
         *,
         policy: Optional[CompactionPolicy] = None,
         build_kwargs: Optional[dict] = None,
+        expect_digest: Optional[str] = None,
     ) -> "StreamingIndex":
         """Reconstruct an index from a :meth:`save_snapshot` file.
 
@@ -445,11 +462,30 @@ class StreamingIndex:
         original construction (they are not part of the snapshot beyond
         M/Z/K_p). Cold-start recovery — snapshot + WAL tail — goes through
         ``repro.stream.wal.recover``.
+
+        ``expect_digest`` (from the segmented manifest) is verified against
+        the file bytes before parsing; a mismatch — or an unreadable npz
+        payload — raises :class:`repro.stream.wal.CorruptSnapshotError`,
+        the typed signal the segmented recovery path quarantines on.
         """
         from repro.search.device_graph import DeviceGraph as _DG
+        from repro.stream.wal import CorruptSnapshotError, file_digest
 
-        with np.load(path, allow_pickle=False) as z:
-            data = {name: z[name] for name in z.files}
+        if expect_digest is not None:
+            got = file_digest(path)
+            if got != expect_digest:
+                raise CorruptSnapshotError(
+                    f"{path}: digest {got} != recorded {expect_digest}"
+                )
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                data = {name: z[name] for name in z.files}
+        except CorruptSnapshotError:
+            raise
+        except Exception as exc:      # zipfile/numpy parse errors on a
+            # flipped byte surface as a typed integrity failure, not a
+            # cryptic BadZipFile deep inside recovery
+            raise CorruptSnapshotError(f"{path}: unreadable snapshot: {exc}")
         (dim, ncap, dcap, ecap, epoch, graph_n, next_id, stride, lsn,
          d_size, M, Z, K_p) = (int(x) for x in data["meta"])
         relation = str(data["relation"].item())

@@ -66,6 +66,29 @@ SEGMENT_SUFFIX = ".log"
 SNAPSHOT_NAME = "snapshot.npz"
 
 
+class CorruptSnapshotError(ValueError):
+    """A snapshot file failed an integrity check: its recorded digest does
+    not match the bytes on disk, or the npz payload itself is unreadable.
+    Raised by ``StreamingIndex.restore`` and caught by the segmented tier's
+    recovery path, which quarantines the damaged segment instead of
+    aborting the whole recovery."""
+
+
+def file_digest(path: str) -> str:
+    """CRC32 of the file bytes as 8 hex chars — the digest recorded in the
+    segmented manifest and verified by ``restore(expect_digest=...)``. CRC32
+    matches the WAL's own framing strength: this detects media corruption,
+    not adversaries."""
+    crc = 0
+    with open(path, "rb") as fh:
+        while True:
+            chunk = fh.read(1 << 20)
+            if not chunk:
+                break
+            crc = zlib.crc32(chunk, crc)
+    return f"{crc & 0xFFFFFFFF:08x}"
+
+
 @dataclasses.dataclass
 class WalRecord:
     """One decoded mutation."""
@@ -452,6 +475,11 @@ def recover(
         "snapshot restore + WAL replay wall clock",
         buckets=LATENCY_BUCKETS_S,
     ).observe(seconds)
+    reg.histogram(
+        "repro_recovery_seconds",
+        "crash-recovery wall clock (monolithic or per segment)",
+        buckets=LATENCY_BUCKETS_S,
+    ).observe(seconds, tier="stream")
     reg.counter(
         "repro_wal_replayed_records_total", "WAL records replayed at recovery"
     ).inc(replayed)

@@ -1,0 +1,651 @@
+"""Crash-safe segmented tier: coordinated per-segment durability, snapshot
+integrity, quarantine + degraded serving, self-healing rebuild.
+
+The ISSUE-10 acceptance criterion pinned here: a ``SegmentedStreamingIndex``
+recovered from its durability directory serves **bit-identically** to a
+never-crashed oracle — including crashes BETWEEN two segment snapshots of
+one coordinated checkpoint and torn WAL tails in a subset of cells — and
+an integrity-failed segment is quarantined (searches exact over the
+survivors, flagged via ``missing_segments``, zero scheduler recompiles)
+rather than failing recovery.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.predicates import DominanceSpace, get_relation
+from repro.fault import corrupt_byte, truncate_file
+from repro.obs.metrics import get_registry
+from repro.scale import (
+    CorruptManifestError,
+    SegmentGrid,
+    SegmentedStreamingIndex,
+    build_segmented_index,
+    read_manifest,
+    write_manifest,
+)
+from repro.scale.durability import grid_from_manifest, segment_dir
+from repro.stream.index import CompactionPolicy
+from repro.stream.wal import WriteAheadLog
+
+DIM = 8
+KW = dict(node_capacity=256, delta_capacity=64, edge_capacity=16)
+POLICY = CompactionPolicy(max_delta_fraction=0.05, min_mutations=16)
+BK = dict(M=6, Z=24, K_p=4)
+
+
+def _dataset(n=140, seed=0, span=100.0):
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, DIM)).astype(np.float32)
+    s = rng.uniform(0.0, span * 0.6, n)
+    t = s + rng.uniform(1.0, span * 0.4, n)
+    return vecs, s, t
+
+
+def _grid(relation, s, t, cells_per_axis=2):
+    rel = get_relation(relation)
+    return SegmentGrid.from_space(
+        DominanceSpace.from_intervals(rel, s, t), cells_per_axis
+    )
+
+
+def _make(relation, grid, storage=None, **over):
+    kw = dict(KW, policy=POLICY, build_kwargs=dict(BK), **BK)
+    kw.update(over)
+    return SegmentedStreamingIndex(
+        DIM, relation, grid, storage_dir=storage, **kw
+    )
+
+
+def _queries(nq=6, seed=9):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((nq, DIM)).astype(np.float32)
+    return q, np.full(nq, 20.0), np.full(nq, 80.0)
+
+
+def _recover(root, **over):
+    kw = dict(policy=POLICY, build_kwargs=dict(BK))
+    kw.update(over)
+    return SegmentedStreamingIndex.recover(str(root), **kw)
+
+
+def _assert_parity(a, b, msg=""):
+    q, sq, tq = _queries()
+    ia, da = a.search(q, sq, tq, k=7)
+    ib, db = b.search(q, sq, tq, k=7)
+    np.testing.assert_array_equal(ia, ib, err_msg=msg)
+    np.testing.assert_array_equal(da, db, err_msg=msg)
+
+
+def _close_wals(idx):
+    for w in idx._wals:
+        if w is not None:
+            w.close()
+
+
+# --- manifest -----------------------------------------------------------------
+
+
+class TestManifest:
+    def test_round_trip(self, tmp_path):
+        vecs, s, t = _dataset(seed=1)
+        grid = _grid("overlap", s, t)
+        man = {
+            "generation": 3, "relation": "overlap", "dim": DIM,
+            "node_capacity": 256, "delta_capacity": 64,
+            "edge_capacity": 16, "M": 6, "Z": 24, "K_p": 4,
+            "grid": {
+                "edges_x": [int(v) for v in grid.edges_x],
+                "edges_y": [int(v) for v in grid.edges_y],
+                "vals_x": [float(v) for v in grid.vals_x],
+                "vals_y": [float(v) for v in grid.vals_y],
+            },
+            "segments": [{"snapshot": None, "digest": None, "lsn": 0}] * 4,
+        }
+        write_manifest(str(tmp_path), man)
+        got = read_manifest(str(tmp_path))
+        assert got == man
+        g2 = grid_from_manifest(got["grid"])
+        np.testing.assert_array_equal(g2.edges_x, grid.edges_x)
+        # the outer value edges are ±inf and must round-trip through JSON
+        np.testing.assert_array_equal(g2.vals_x, grid.vals_x)
+        np.testing.assert_array_equal(g2.vals_y, grid.vals_y)
+
+    def test_missing_raises_file_not_found(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            read_manifest(str(tmp_path))
+
+    @pytest.mark.parametrize("damage", ["crc", "magic", "short", "json"])
+    def test_corruption_detected(self, tmp_path, damage):
+        write_manifest(str(tmp_path), {"generation": 0, "segments": []})
+        path = os.path.join(str(tmp_path), "MANIFEST")
+        if damage == "crc":
+            corrupt_byte(path, os.path.getsize(path) - 2)
+        elif damage == "magic":
+            corrupt_byte(path, 0)
+        elif damage == "short":
+            truncate_file(path, 5)
+        else:
+            corrupt_byte(path, 10)   # inside the JSON payload -> CRC fails
+        with pytest.raises(CorruptManifestError):
+            read_manifest(str(tmp_path))
+
+    def test_fresh_dir_refuses_existing_manifest(self, tmp_path):
+        vecs, s, t = _dataset(seed=2)
+        grid = _grid("overlap", s, t)
+        idx = _make("overlap", grid, storage=str(tmp_path))
+        _close_wals(idx)
+        with pytest.raises(RuntimeError, match="recover"):
+            _make("overlap", grid, storage=str(tmp_path))
+
+
+# --- input boundary (satellite 1) ----------------------------------------------
+
+
+class TestInsertValidation:
+    def setup_method(self):
+        vecs, s, t = _dataset(seed=3)
+        self.grid = _grid("overlap", s, t)
+        self.idx = _make("overlap", self.grid)
+
+    def test_rejects_non_finite_intervals(self):
+        v = np.zeros(DIM, np.float32)
+        for s, t in ((np.nan, 5.0), (1.0, np.inf), (-np.inf, 2.0)):
+            with pytest.raises(ValueError):
+                self.idx.insert(v, s, t)
+        assert self.idx.live_count == 0
+
+    def test_rejects_non_finite_vectors(self):
+        v = np.zeros(DIM, np.float32)
+        for bad in (np.nan, np.inf, -np.inf):
+            v2 = v.copy()
+            v2[3] = bad
+            with pytest.raises(ValueError, match="non-finite"):
+                self.idx.insert(v2, 1.0, 5.0)
+        assert self.idx.live_count == 0
+
+    def test_rejects_shape_mismatch(self):
+        with pytest.raises(ValueError):
+            self.idx.insert(np.zeros(DIM + 1, np.float32), 1.0, 5.0)
+        with pytest.raises(ValueError):
+            self.idx.insert_batch(np.zeros((3, DIM), np.float32),
+                                  np.zeros(2), np.ones(2))
+
+    def test_batch_rejects_atomically(self):
+        """One bad row rejects the WHOLE batch before any routing: no
+        partial application, no ids burned."""
+        vecs, s, t = _dataset(n=10, seed=4)
+        t[7] = np.nan
+        with pytest.raises(ValueError):
+            self.idx.insert_batch(vecs, s, t)
+        assert self.idx.live_count == 0
+        t[7] = s[7] + 1.0
+        vecs[2, 0] = np.inf
+        with pytest.raises(ValueError):
+            self.idx.insert_batch(vecs, s, t)
+        assert self.idx.live_count == 0
+
+    def test_vectorized_batch_ids_match_row_loop(self):
+        """insert_batch routes the whole batch in one vectorized transform
+        + grid assignment; the assigned external ids must be bit-identical
+        to the historical row-by-row path (per-cell arrival order)."""
+        vecs, s, t = _dataset(n=80, seed=5)
+        a = _make("overlap", self.grid)
+        b = _make("overlap", self.grid)
+        ids_batch = a.insert_batch(vecs, s, t)
+        ids_loop = np.array([
+            b.insert(vecs[i], float(s[i]), float(t[i]))
+            for i in range(80)
+        ])
+        np.testing.assert_array_equal(ids_batch, ids_loop)
+        _assert_parity(a, b)
+
+
+# --- coordinated checkpoint + recovery -----------------------------------------
+
+
+class TestCheckpointRecovery:
+    def _populated(self, tmp_path, relation="overlap", seed=6, **over):
+        vecs, s, t = _dataset(seed=seed)
+        grid = _grid(relation, s, t)
+        idx = _make(relation, grid, storage=str(tmp_path), **over)
+        idx.insert_batch(vecs, s, t)
+        return idx, grid, (vecs, s, t)
+
+    def test_checkpoint_then_recover_bit_identical(self, tmp_path):
+        idx, grid, _ = self._populated(tmp_path)
+        gen = idx.save_snapshot()
+        assert gen == 1
+        # post-checkpoint tail: inserts + deletes replayed from the WALs
+        vecs2, s2, t2 = _dataset(n=25, seed=7)
+        ids2 = idx.insert_batch(vecs2, s2, t2)
+        for e in ids2[:4]:
+            assert idx.delete(int(e))
+        _close_wals(idx)
+        rec, report = _recover(tmp_path)
+        assert report.quarantined == []
+        assert report.generation == 1
+        assert report.records_replayed >= 25 + 4
+        assert rec.live_count == idx.live_count
+        _assert_parity(rec, idx)
+        # recovered index resumes the id namespace without collisions
+        before = set(rec.live_ids().tolist())
+        rng = np.random.default_rng(0)
+        new = rec.insert(rng.standard_normal(DIM).astype(np.float32),
+                         10.0, 30.0)
+        assert new not in before
+
+    def test_second_checkpoint_prunes_and_gcs(self, tmp_path):
+        idx, grid, _ = self._populated(tmp_path,
+                                       wal_segment_bytes=1024)
+        idx.save_snapshot()
+        vecs2, s2, t2 = _dataset(n=30, seed=8)
+        idx.insert_batch(vecs2, s2, t2)
+        gen = idx.save_snapshot()
+        assert gen == 2
+        man = read_manifest(str(tmp_path))
+        assert man["generation"] == 2
+        for ci in range(idx.num_segments):
+            names = os.listdir(segment_dir(str(tmp_path), ci))
+            snaps = [n for n in names if n.startswith("snapshot-")]
+            # old generation GC'd after the manifest publish
+            assert snaps == [man["segments"][ci]["snapshot"]]
+        _close_wals(idx)
+        rec, report = _recover(tmp_path, wal_segment_bytes=1024)
+        assert report.quarantined == []
+        _assert_parity(rec, idx)
+
+    def test_crash_between_segment_snapshots(self, tmp_path):
+        """Crash after SOME cells wrote their new generation but before
+        the manifest publish: recovery lands on the previous generation +
+        full WAL tails — bit-identical to the pre-crash index — and the
+        orphan new-generation files are GC'd."""
+        idx, grid, _ = self._populated(tmp_path)
+        idx.save_snapshot()
+        vecs2, s2, t2 = _dataset(n=20, seed=9)
+        idx.insert_batch(vecs2, s2, t2)
+        # emulate the partial checkpoint: cells 0..1 wrote generation-2
+        # snapshot files, the crash hit before write_manifest
+        for ci in (0, 1):
+            sub = idx.subs[ci]
+            path = os.path.join(segment_dir(str(tmp_path), ci),
+                                "snapshot-00000002.npz")
+            sub.save_snapshot(path, prune_wal=False)
+        _close_wals(idx)
+        rec, report = _recover(tmp_path)
+        assert report.generation == 1
+        assert report.quarantined == []
+        _assert_parity(rec, idx)
+        for ci in range(rec.num_segments):
+            names = os.listdir(segment_dir(str(tmp_path), ci))
+            assert not any("00000002" in n for n in names), \
+                "orphan generation must be GC'd"
+
+    def test_torn_tails_in_subset_of_cells(self, tmp_path):
+        """Torn WAL tails in SOME cells: each cell independently recovers
+        its surviving prefix; untouched cells recover everything."""
+        idx, grid, _ = self._populated(tmp_path, seed=10)
+        idx.save_snapshot()
+        vecs2, s2, t2 = _dataset(n=30, seed=11)
+        idx.insert_batch(vecs2, s2, t2)
+        _close_wals(idx)
+        torn = []
+        for ci in (0, 2):
+            seg = segment_dir(str(tmp_path), ci)
+            wals = sorted(n for n in os.listdir(seg)
+                          if n.startswith("wal-"))
+            path = os.path.join(seg, wals[-1])
+            if os.path.getsize(path) > 8:
+                truncate_file(path, os.path.getsize(path) - 5)
+                torn.append(ci)
+        assert torn
+        rec, report = _recover(tmp_path)
+        assert report.quarantined == []
+        assert {r.cell for r in report.segments if r.truncated} == set(torn)
+        # oracle: fresh storage-free index replaying each cell's
+        # surviving records
+        oracle = _make("overlap", grid)
+        for ci in range(oracle.num_segments):
+            ro = WriteAheadLog(segment_dir(str(tmp_path), ci), sync="never")
+            for r in ro.replay(after_lsn=0):
+                oracle.subs[ci].apply_record(r)
+            ro.close()
+        _assert_parity(rec, oracle)
+
+    def test_recovery_is_deterministic(self, tmp_path):
+        """Two recoveries of the same directory are bit-identical despite
+        concurrent per-cell recovery (thread scheduling must not leak)."""
+        idx, grid, _ = self._populated(tmp_path, seed=12)
+        idx.save_snapshot()
+        vecs2, s2, t2 = _dataset(n=15, seed=13)
+        idx.insert_batch(vecs2, s2, t2)
+        _close_wals(idx)
+        rec1, _ = _recover(tmp_path, max_workers=4)
+        _close_wals(rec1)
+        rec2, _ = _recover(tmp_path, max_workers=1)
+        _assert_parity(rec1, rec2)
+
+
+# --- snapshot integrity + quarantine -------------------------------------------
+
+
+class TestQuarantine:
+    def _crashed(self, tmp_path, *, seg_bytes=1024, seed=14):
+        vecs, s, t = _dataset(seed=seed)
+        grid = _grid("overlap", s, t)
+        idx = _make("overlap", grid, storage=str(tmp_path),
+                    wal_segment_bytes=seg_bytes)
+        idx.insert_batch(vecs, s, t)
+        idx.save_snapshot()
+        vecs2, s2, t2 = _dataset(n=20, seed=seed + 1)
+        idx.insert_batch(vecs2, s2, t2)
+        _close_wals(idx)
+        return idx, grid
+
+    def test_corrupt_snapshot_full_wal_fallback(self, tmp_path):
+        """Corrupt snapshot but the WAL was never pruned (large segments):
+        the cell falls back to a full replay — NOT quarantined — and
+        serves bit-identically."""
+        idx, grid = self._crashed(tmp_path, seg_bytes=1 << 20)
+        man = read_manifest(str(tmp_path))
+        snap = os.path.join(segment_dir(str(tmp_path), 0),
+                            man["segments"][0]["snapshot"])
+        corrupt_byte(snap, 80)
+        rec, report = _recover(tmp_path, wal_segment_bytes=1 << 20)
+        assert report.quarantined == []
+        assert "full WAL replay" in report.segments[0].reason
+        _assert_parity(rec, idx)
+
+    def test_corrupt_snapshot_pruned_wal_quarantines(self, tmp_path):
+        """Corrupt snapshot AND pruned history: the cell is quarantined,
+        recovery completes, searches are the exact top-k over survivors
+        with the gap flagged, and no quarantined-cell id ever leaks."""
+        idx, grid = self._crashed(tmp_path, seg_bytes=1024)
+        man = read_manifest(str(tmp_path))
+        victim = 0
+        snap = os.path.join(segment_dir(str(tmp_path), victim),
+                            man["segments"][victim]["snapshot"])
+        corrupt_byte(snap, 120)
+        rec, report = _recover(tmp_path, wal_segment_bytes=1024)
+        assert report.quarantined == [victim]
+        assert sorted(rec.quarantined) == [victim]
+        q, sq, tq = _queries()
+        ids, d, info = rec.search(q, sq, tq, k=7, return_partial=True)
+        assert info.degraded
+        assert info.missing_segments == [victim]
+        C = rec.num_segments
+        assert not np.any((ids >= 0) & (ids % C == victim))
+        # survivors-exact oracle: the (bit-identical) pre-crash index with
+        # the same cell masked out of routing
+        idx.quarantine_segment(victim, "oracle mask")
+        oid, od, oinfo = idx.search(q, sq, tq, k=7, return_partial=True)
+        np.testing.assert_array_equal(ids, oid)
+        np.testing.assert_array_equal(d, od)
+        # rebuild cannot succeed while the storage stays corrupt
+        assert rec.maybe_rebuild() == {victim: False}
+        assert victim in rec.quarantined
+
+    def test_wal_corruption_alone_never_quarantines(self, tmp_path):
+        idx, grid = self._crashed(tmp_path, seg_bytes=1 << 20)
+        seg = segment_dir(str(tmp_path), 1)
+        wals = sorted(n for n in os.listdir(seg) if n.startswith("wal-"))
+        path = os.path.join(seg, wals[-1])
+        corrupt_byte(path, os.path.getsize(path) // 2)
+        rec, report = _recover(tmp_path, wal_segment_bytes=1 << 20)
+        assert report.quarantined == []
+
+    def test_runtime_quarantine_and_storage_rebuild(self, tmp_path):
+        """Runtime fault -> quarantine -> maybe_rebuild self-heals from
+        intact storage, lifting the quarantine with full parity and a
+        re-primed stack slice."""
+        vecs, s, t = _dataset(seed=16)
+        grid = _grid("overlap", s, t)
+        idx = _make("overlap", grid, storage=str(tmp_path))
+        idx.insert_batch(vecs, s, t)
+        idx.maybe_compact()   # give cells a non-empty compacted tier
+        idx.save_snapshot()
+        q, sq, tq = _queries()
+        pre = idx.search(q, sq, tq, k=7)
+        st = idx.device_stack()
+        hot = int(np.argmax([sub.live_count for sub in idx.subs]))
+        idx.quarantine_segment(hot, "poisoned")
+        assert hot in idx.quarantined
+        # the quarantined slice is scrubbed: all gids -1
+        assert np.all(np.asarray(st.part(hot)["gids"]) == -1)
+        ids, d, info = idx.search(q, sq, tq, k=7, return_partial=True)
+        assert info.missing_segments == [hot] or not info.degraded
+        assert idx.maybe_rebuild() == {hot: True}
+        assert not idx.quarantined
+        post = idx.search(q, sq, tq, k=7)
+        np.testing.assert_array_equal(pre[0], post[0])
+        np.testing.assert_array_equal(pre[1], post[1])
+        # the stack slice was re-primed from the rebuilt cell: it must
+        # equal a fresh export of that cell's (non-empty) compacted tier
+        sub = idx.subs[hot]
+        with sub._lock:
+            want = np.where(
+                sub._graph_live, sub._graph_ext, -1
+            ).astype(np.int32)
+        got = np.asarray(st.part(hot)["gids"])
+        np.testing.assert_array_equal(got[: want.shape[0]], want)
+        assert got.max() >= 0
+
+    def test_memory_only_rebuild_without_storage(self, tmp_path):
+        """No storage bound: rebuild falls back to the stashed
+        pre-quarantine object's live set (original external ids)."""
+        vecs, s, t = _dataset(seed=17)
+        grid = _grid("overlap", s, t)
+        idx = _make("overlap", grid)
+        ids0 = idx.insert_batch(vecs, s, t)
+        hot = int(np.argmax([sub.live_count for sub in idx.subs]))
+        live_before = set(idx.subs[hot].live_ids().tolist())
+        idx.quarantine_segment(hot, "poisoned")
+        assert idx.maybe_rebuild() == {hot: True}
+        assert set(idx.subs[hot].live_ids().tolist()) == live_before
+
+    def test_rebuild_backoff_is_seeded_exponential(self, tmp_path):
+        """Failed rebuilds walk a seeded exponential-with-jitter ladder —
+        retry deadlines strictly grow and stay within the policy bounds."""
+        vecs, s, t = _dataset(seed=18)
+        grid = _grid("overlap", s, t)
+        idx = _make("overlap", grid, rebuild_backoff_s=0.05,
+                    rebuild_backoff_max_s=5.0, rebuild_backoff_seed=3)
+        idx.insert_batch(vecs, s, t)
+        hot = 0
+        idx.quarantine_segment(hot, "poisoned")
+        idx._q_src.pop(hot)      # no storage AND no stash -> always fails
+        delays = []
+        import time as _time
+        for fails in range(1, 5):
+            idx._q_retry_at[hot] = 0.0      # force eligibility
+            before = _time.monotonic()
+            assert idx.maybe_rebuild() == {hot: False}
+            delays.append(idx._q_retry_at[hot] - before)
+            assert idx._q_fails[hot] == fails
+        for i, dly in enumerate(delays):
+            base = 0.05 * (2 ** i)
+            assert 0.5 * base <= dly <= min(base, 5.0) + 0.05
+        # deterministic: the same seed reproduces the same jitter ladder
+        rng = np.random.default_rng(3)
+        expect = [min(0.05 * 2 ** i, 5.0) * (0.5 + 0.5 * rng.random())
+                  for i in range(4)]
+        np.testing.assert_allclose(delays, expect, atol=0.05)
+
+    def test_insert_into_quarantined_cell_rejected(self, tmp_path):
+        vecs, s, t = _dataset(seed=19)
+        grid = _grid("overlap", s, t)
+        idx = _make("overlap", grid)
+        ids = idx.insert_batch(vecs, s, t)
+        rel = get_relation("overlap")
+        cell = grid.assign_values(*rel.transform_data(s, t))
+        victim = int(cell[0])
+        idx.quarantine_segment(victim, "poisoned")
+        with pytest.raises(RuntimeError, match="quarantined"):
+            idx.insert(vecs[0], float(s[0]), float(t[0]))
+        # rows routed elsewhere still insert
+        other = int(np.flatnonzero(cell != victim)[0])
+        new = idx.insert(vecs[other], float(s[other]), float(t[other]))
+        assert new % idx.num_segments != victim
+
+    def test_quarantine_metrics_exported(self, tmp_path):
+        reg = get_registry()
+        vecs, s, t = _dataset(seed=20)
+        grid = _grid("overlap", s, t)
+        idx = _make("overlap", grid, storage=str(tmp_path))
+        idx.insert_batch(vecs, s, t)
+        idx.save_snapshot()
+        idx.quarantine_segment(0, "poisoned")
+        assert reg.gauge("repro_segments_quarantined").value() >= 1
+        idx.maybe_rebuild()
+        assert reg.gauge("repro_segments_quarantined").value() == 0
+        _close_wals(idx)
+        _recover(tmp_path)
+        names = reg.names()
+        for name in ("repro_recovery_seconds",
+                     "repro_wal_replayed_records_total",
+                     "repro_snapshot_bytes", "repro_snapshot_seconds"):
+            assert name in names, name
+
+
+# --- batch tier: quarantine through the worklist scheduler ---------------------
+
+
+class TestBatchTierQuarantine:
+    @pytest.fixture(scope="class")
+    def env(self):
+        from repro.data import make_dataset, make_queries_vectors
+
+        n, d = 600, 8
+        vecs, s, t = make_dataset(n, d, seed=31)
+        idx = build_segmented_index(vecs, s, t, "overlap",
+                                    cells_per_axis=2, M=8, Z=32, K_p=4)
+        qv = make_queries_vectors(8, d, seed=4)
+        sq = np.full(8, float(np.min(s)))
+        tq = np.full(8, float(np.max(t)))
+        return dict(idx=idx, vecs=vecs, s=s, t=t, qv=qv, sq=sq, tq=tq)
+
+    def test_degraded_exact_over_survivors_zero_recompiles(self, env):
+        from repro.exec import worklist_exec_cache_size
+
+        idx = env["idx"]
+        qv, sq, tq = env["qv"], env["sq"], env["tq"]
+        full = idx.search(qv, sq, tq, k=9, beam=40, return_route=True)
+        victim = int(np.flatnonzero(full[2].any(axis=0))[0])
+        # warm the bucket the degraded mix lands in, then pin the count
+        idx.quarantine_segment(victim, "poisoned")
+        idx.search(qv, sq, tq, k=9, beam=40)
+        idx.lift_quarantine(victim)
+        warm = worklist_exec_cache_size()
+
+        healthy = idx.search(qv, sq, tq, k=9, beam=40)
+        idx.quarantine_segment(victim, "poisoned")
+        ids, d, route, info = idx.search(qv, sq, tq, k=9, beam=40,
+                                         return_route=True,
+                                         return_partial=True)
+        assert worklist_exec_cache_size() == warm, "no recompiles allowed"
+        assert info.degraded and info.missing_segments == [victim]
+        assert not route[:, victim].any()
+        # bit parity with the per-segment host-loop oracle under the
+        # same quarantine mask (the pinned scheduler-parity contract)
+        oid, od = idx.search(qv, sq, tq, k=9, beam=40, scheduler=False)
+        np.testing.assert_array_equal(ids, oid)
+        np.testing.assert_allclose(d, od)
+        # no victim row ever surfaces; every hit is a valid survivor,
+        # and the nearest surviving neighbor is always found
+        victim_members = set(idx.segments[victim].ids.tolist())
+        member = np.zeros(env["vecs"].shape[0], bool)
+        for si, seg in enumerate(idx.segments):
+            if si != victim:
+                member[seg.ids] = True
+        rel = get_relation("overlap")
+        for b in range(qv.shape[0]):
+            got = ids[b][ids[b] >= 0]
+            assert not (set(got.tolist()) & victim_members)
+            ok = member & np.asarray(
+                rel.valid_mask(env["s"], env["t"], sq[b], tq[b]))
+            assert np.all(ok[got])
+            vids = np.flatnonzero(ok)
+            if vids.size:
+                dd = np.sum((env["vecs"][vids] - qv[b]) ** 2, axis=1)
+                assert vids[np.argmin(dd)] in set(got.tolist())
+        idx.lift_quarantine(victim)
+        restored = idx.search(qv, sq, tq, k=9, beam=40)
+        np.testing.assert_array_equal(healthy[0], restored[0])
+
+    def test_sharded_export_masks_quarantined(self, env):
+        """segments_to_sharded_index on a quarantined index: the bad
+        shard contributes NOTHING device-side — no entry points, an
+        empty planner (routes BRUTE over zero candidates), and a -1
+        ``id_map`` row so nothing can ever translate back to its ids."""
+        from repro.serve.distributed import segments_to_sharded_index
+
+        idx = env["idx"]
+        qv, sq, tq = env["qv"], env["sq"], env["tq"]
+        full = idx.search(qv, sq, tq, k=9, beam=40, return_route=True)
+        victim = int(np.flatnonzero(full[2].any(axis=0))[0])
+        idx.quarantine_segment(victim, "poisoned")
+        try:
+            sharded, id_map = segments_to_sharded_index(idx)
+            assert np.all(id_map[victim] == -1)
+            assert np.all(np.asarray(sharded.entry_node)[victim] == -1)
+            assert sharded.planners[victim].n == 0
+            # survivors keep their export untouched
+            other = next(si for si in range(idx.num_segments)
+                         if si != victim and idx.segments[si].ids.size)
+            np.testing.assert_array_equal(
+                id_map[other][: idx.segments[other].ids.size],
+                idx.segments[other].ids,
+            )
+        finally:
+            idx.lift_quarantine(victim)
+
+
+@pytest.mark.slow
+def test_sharded_serving_degraded_subprocess():
+    """End-to-end shard_map serving of a quarantined segmented index
+    (subprocess with forced host devices, as the serving tests do): the
+    degraded PartialResult flags the gap and never leaks a victim id."""
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import numpy as np
+from repro.data import make_dataset, make_queries_vectors
+from repro.launch.mesh import make_host_mesh
+from repro.scale import build_segmented_index
+from repro.serve.distributed import segments_to_sharded_index, serve_batch
+
+vecs, s, t = make_dataset(600, 8, seed=31)
+idx = build_segmented_index(vecs, s, t, "overlap", cells_per_axis=2,
+                            M=8, Z=32, K_p=4, quantize_int8=False)
+qv = make_queries_vectors(8, 8, seed=4)
+sq = np.full(8, float(np.min(s)))
+tq = np.full(8, float(np.max(t)))
+_, _, route = idx.search(qv, sq, tq, k=9, beam=40, return_route=True)
+victim = int(np.flatnonzero(route.any(axis=0))[0])
+idx.quarantine_segment(victim, "poisoned")
+sh, id_map = segments_to_sharded_index(idx)
+mesh = make_host_mesh(model_parallel=sh.num_shards)
+out = serve_batch(sh, mesh, qv, sq, tq, k=9, beam=40, id_map=id_map,
+                  missing_shards=sorted(idx.quarantined),
+                  return_partial=True)
+assert out.degraded and out.missing_shards == [victim], out.missing_shards
+victims = set(idx.segments[victim].ids.tolist())
+leaked = set(int(i) for i in out.ids[out.ids >= 0]) & victims
+assert not leaked, leaked
+assert np.all(np.isinf(out.dists[out.ids < 0]))
+print("OK")
+"""
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        PYTHONPATH=os.path.join(repo, "src"),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "OK" in out.stdout

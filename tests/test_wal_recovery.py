@@ -287,3 +287,110 @@ def test_random_corruption_parity_property(relation, tmp_path):
         rec, oracle, relation,
         msg=f"{relation}: corrupted byte {off} of {victim}",
     )
+
+
+# --- edge cases: rotation boundaries, empty-WAL recovery, report accounting ----
+
+
+class TestWalEdgeCases:
+    def _rotated(self, tmp_path, n=40):
+        wal = WriteAheadLog(str(tmp_path), segment_bytes=256, sync="never")
+        for i in range(n):
+            wal.append_delete(i)
+        assert len(wal.segments()) > 2
+        return wal
+
+    def _segment_last_lsn(self, wal, name):
+        path = os.path.join(wal.dir, name)
+        with open(path, "rb") as fh:
+            buf = fh.read()
+        from repro.stream.wal import _decode_one
+
+        off, last = 0, 0
+        while True:
+            rec, off, reason = _decode_one(buf, off)
+            if rec is None:
+                return last
+            last = rec.lsn
+
+    def test_prune_exactly_on_rotation_boundary(self, tmp_path):
+        """prune(upto) where upto is the LAST record of a rotated segment:
+        that segment is fully covered and must go; the next one must stay
+        even though its first record is upto+1."""
+        wal = self._rotated(tmp_path)
+        first = wal.segments()[0]
+        boundary = self._segment_last_lsn(wal, first)
+        n_before = len(wal.segments())
+        removed = wal.prune(upto_lsn=boundary)
+        assert removed == 1
+        assert len(wal.segments()) == n_before - 1
+        assert first not in wal.segments()
+        survivors = [r.lsn for r in wal.replay(after_lsn=boundary)]
+        assert survivors[0] == boundary + 1
+        # one LSN short of the boundary removes nothing more
+        assert wal.prune(upto_lsn=boundary) == 0
+        wal.close()
+
+    def test_replay_after_last_lsn_of_rotated_segment(self, tmp_path):
+        """after_lsn == the final record of a rotated segment yields
+        exactly the records of the following segments, in order, with the
+        skipped prefix still CRC-validated (report counts only yielded)."""
+        wal = self._rotated(tmp_path)
+        boundary = self._segment_last_lsn(wal, wal.segments()[0])
+        got = [r.lsn for r in wal.replay(after_lsn=boundary)]
+        assert got == list(range(boundary + 1, wal.last_lsn + 1))
+        rep = wal.last_replay
+        assert rep.records == len(got)
+        assert rep.last_lsn == wal.last_lsn
+        assert not rep.truncated
+        wal.close()
+
+    def test_recover_empty_wal_snapshot_only(self, tmp_path):
+        """Snapshot present, WAL fully pruned: recovery = pure restore
+        (zero records replayed), bit-identical serving."""
+        wal = WriteAheadLog(str(tmp_path), segment_bytes=256, sync="never")
+        idx = StreamingIndex(DIM, "containment", wal=wal, **KW)
+        _mutations(idx, 40, seed=3)
+        idx.save_snapshot(str(tmp_path), prune_wal=True)
+        # drop what prune left (the active segment) to make the WAL empty
+        wal.close()
+        for name in wal.segments():
+            os.remove(os.path.join(str(tmp_path), name))
+        rec, report = recover(str(tmp_path), dim=DIM,
+                              relation="containment", **KW)
+        assert report.snapshot_found
+        assert report.records_replayed == 0
+        assert not report.truncated
+        assert rec.live_count == idx.live_count
+        _assert_search_parity(rec, idx)
+
+    def test_recover_empty_dir_is_fresh_boot(self, tmp_path):
+        rec, report = recover(str(tmp_path), dim=DIM,
+                              relation="containment", **KW)
+        assert not report.snapshot_found
+        assert report.records_replayed == 0
+        assert report.live_count == 0 and rec.live_count == 0
+
+    def test_recovery_report_field_accounting(self, tmp_path):
+        """Every RecoveryReport field tied to ground truth: snapshot
+        found, exact tail count, torn-tail flag, LSN high-water mark,
+        live count."""
+        wal = WriteAheadLog(str(tmp_path), sync="never")
+        idx = StreamingIndex(DIM, "containment", wal=wal, **KW)
+        ids = _mutations(idx, 30, seed=5)
+        idx.save_snapshot(str(tmp_path), prune_wal=False)
+        snap_lsn = idx.wal_lsn
+        _mutations(idx, 7, seed=6)
+        for e in ids[:2]:
+            idx.delete(int(e))
+        wal.close()
+        seg = wal.active_segment_path
+        truncate_file(seg, os.path.getsize(seg) - 2)   # tear the final frame
+        rec, report = recover(str(tmp_path), dim=DIM,
+                              relation="containment", **KW)
+        assert report.snapshot_found
+        # 7 inserts + 2 deletes after the snapshot, minus the torn one
+        assert report.records_replayed == 8
+        assert report.truncated
+        assert report.last_lsn == snap_lsn + 8 == rec.wal_lsn
+        assert report.live_count == rec.live_count == 30 + 7 - 1
